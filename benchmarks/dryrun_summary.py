@@ -1,0 +1,42 @@
+"""§Dry-run summary table: compile time / peak memory / fit verdict for
+every (arch × shape × mesh) from results/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+HBM_PER_CHIP = 16 * 2 ** 30     # v5e
+
+
+def run() -> list[dict]:
+    rows = []
+    for path in sorted(RESULTS_DIR.glob("*.json")):
+        if "__opt" in path.name:
+            continue
+        r = json.loads(path.read_text())
+        peak = r["memory"]["peak_bytes"] or 0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compile_s": r["compile_s"],
+            "peak_gib": round(peak / 2 ** 30, 2),
+            "fits": peak < HBM_PER_CHIP,
+            "notes": "; ".join(r.get("notes", [])),
+        })
+    if not rows:
+        print(f"[dryrun-summary] no results in {RESULTS_DIR}")
+        return rows
+    print(f"{'arch':24s} {'shape':11s} {'mesh':8s} {'compile':>8s} "
+          f"{'peak GiB':>9s} fit")
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:11s} {r['mesh']:8s} "
+              f"{r['compile_s']:8.1f} {r['peak_gib']:9.2f} "
+              f"{'ok' if r['fits'] else 'OOM!'}")
+    n_fit = sum(r["fits"] for r in rows)
+    print(f"[dryrun-summary] {n_fit}/{len(rows)} combinations fit "
+          f"{HBM_PER_CHIP / 2**30:.0f} GiB/chip")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""§Perf delta report: baseline vs optimized (*__opt.json) roofline terms
+for every pair that has both artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run() -> list[dict]:
+    rows = []
+    for opt_path in sorted(RESULTS_DIR.glob("*__opt.json")):
+        base_path = Path(str(opt_path).replace("__opt", ""))
+        if not base_path.exists():
+            continue
+        b = json.loads(base_path.read_text())["census"]
+        o = json.loads(opt_path.read_text())["census"]
+        name = base_path.stem
+        row = {
+            "pair": name,
+            "compute_s": (round(b["flops"] / PEAK_FLOPS, 3),
+                          round(o["flops"] / PEAK_FLOPS, 3)),
+            "collective_s": (round(b["collective_bytes"] / ICI_BW, 3),
+                             round(o["collective_bytes"] / ICI_BW, 3)),
+            "speedup_collective": round(
+                b["collective_bytes"] / max(o["collective_bytes"], 1), 1),
+        }
+        rows.append(row)
+        print(f"[perf] {name}: compute {row['compute_s'][0]} -> "
+              f"{row['compute_s'][1]} s; collective "
+              f"{row['collective_s'][0]} -> {row['collective_s'][1]} s "
+              f"({row['speedup_collective']}x)")
+    if not rows:
+        print("[perf] no __opt artifacts; run dryrun --opt first")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

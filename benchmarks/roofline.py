@@ -1,0 +1,81 @@
+"""§Roofline: three-term roofline table from the dry-run JSONs.
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and prints, per (arch × shape × mesh): compute / memory / collective terms
+in seconds, the dominant term, MODEL_FLOPS / HLO_FLOPs usefulness ratio,
+and a one-line "what would move the dominant term" note.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+MOVE_NOTES = {
+    "compute_s": "shard more FLOP-dense dims / cut remat recompute "
+                 "(fewer checkpoint boundaries) / causal block skipping",
+    "memory_s": "fuse CE with unembed, keep activations bf16, widen "
+                "microbatches to raise arithmetic intensity",
+    "collective_s": "overlap collectives with compute, reduce-scatter "
+                    "instead of all-reduce for grads, shrink expert "
+                    "all-to-all payload (bf16 router combine)",
+}
+
+
+def analyze(path: Path) -> dict:
+    r = json.loads(path.read_text())
+    census = r["census"]
+    flops = census["flops"]
+    hbm_hi = census["hbm_bytes"]
+    hbm_lo = r.get("analytic_hbm_bytes", hbm_hi)
+    coll = census["collective_bytes"]
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_lo_s": hbm_lo / HBM_BW,
+        "memory_hi_s": hbm_hi / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    # dominant term: memory judged by its analytic floor (the census bound
+    # carries CPU-fusion-granularity inflation; see roofline.py docstring)
+    cand = {"compute_s": terms["compute_s"],
+            "memory_s": terms["memory_lo_s"],
+            "collective_s": terms["collective_s"]}
+    dominant = max(cand, key=cand.get)
+    model_fl = r.get("model_flops", 0.0)
+    ratio = model_fl / (flops * r["chips"]) if flops else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "step": r["step"], **{k: round(v, 4) for k, v in terms.items()},
+        "dominant": dominant,
+        "useful_ratio": round(ratio, 3),
+        "peak_gib": round((r["memory"]["peak_bytes"] or 0) / 2**30, 2),
+        "note": MOVE_NOTES[dominant],
+    }
+
+
+def run(mesh_filter: str = "16x16") -> list[dict]:
+    rows = []
+    for path in sorted(RESULTS_DIR.glob(f"*__{mesh_filter}.json")):
+        rows.append(analyze(path))
+    if not rows:
+        print(f"[roofline] no dry-run results in {RESULTS_DIR} "
+              f"(run python -m repro.launch.dryrun first)")
+        return rows
+    hdr = (f"{'arch':24s} {'shape':11s} {'compute_s':>9s} {'mem_lo_s':>9s} "
+           f"{'mem_hi_s':>9s} {'coll_s':>8s} {'dominant':>12s} "
+           f"{'useful':>7s} {'peakGiB':>8s}")
+    print(hdr)
+    for row in rows:
+        print(f"{row['arch']:24s} {row['shape']:11s} "
+              f"{row['compute_s']:9.3f} {row['memory_lo_s']:9.3f} "
+              f"{row['memory_hi_s']:9.3f} {row['collective_s']:8.3f} "
+              f"{row['dominant']:>12s} {row['useful_ratio']:7.3f} "
+              f"{row['peak_gib']:8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

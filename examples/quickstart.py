@@ -1,0 +1,44 @@
+"""Quickstart: the paper in ~40 lines.
+
+Builds a 2-layer GCN on a synthetic Amazon-Photo-statistics graph, trains
+it with the community-based ADMM algorithm (serial: one agent), and
+compares against Adam — the paper's §4.2 in miniature.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import gcn, graph
+from repro.core.serial import BaselineTrainer, SerialADMMTrainer
+from repro.core.subproblems import ADMMConfig
+
+
+def main():
+    # synthetic stand-in with Amazon Photo statistics (Table 2)
+    g = graph.synthetic_sbm("amazon_photo_mini", seed=0)
+    print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
+          f"{g.num_classes} classes")
+
+    # the paper's model: 2-layer GCN (hidden width reduced for CPU speed;
+    # the paper uses 1000 — pass hidden=1000 to reproduce exactly)
+    hidden = 128
+    cfg = gcn.GCNConfig(layer_dims=(g.features.shape[1], hidden,
+                                    g.num_classes))
+    admm = ADMMConfig(nu=1e-4, rho=1e-4)   # paper's Photo hyperparams
+
+    print("\n--- Serial ADMM (Algorithm 1, one community) ---")
+    trainer = SerialADMMTrainer(cfg, admm, g, seed=0)
+    log = trainer.train(25, log_every=5, verbose=True)
+
+    print("\n--- Adam baseline (paper §4.2, lr 1e-3) ---")
+    adam = BaselineTrainer(cfg, g, "adam", 1e-3, seed=0)
+    alog = adam.train(25, verbose=False)
+    print(f"adam final: train {alog.train_acc[-1]:.3f} "
+          f"test {alog.test_acc[-1]:.3f}")
+
+    print(f"\nADMM  final: train {log.train_acc[-1]:.3f} "
+          f"test {log.test_acc[-1]:.3f}")
+    print("(paper finding: ADMM reaches comparable accuracy and converges "
+          "fastest; see benchmarks/accuracy.py for the full Figure 2 run)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving example: batched KV-cache decode across architecture families —
+full-cache attention (qwen2), compressed-latent MLA (deepseek-v3), constant
+-state SSM (mamba2) and sliding-window rolling cache (long-context mode).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.build import make_model
+
+
+def decode_demo(arch: str, rolling: bool = False, steps: int = 12,
+                batch: int = 4, max_len: int = 64):
+    import dataclasses
+    cfg = get_config(arch, reduced=True)
+    if rolling and cfg.arch_type not in ("ssm", "hybrid"):
+        cfg = dataclasses.replace(cfg, sliding_window=16)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    caches = model.init_cache(batch, max_len, rolling=rolling)
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t,
+                                                     rolling=rolling))
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    logits, caches = step(params, caches, tok)        # compile
+    t0 = time.perf_counter()
+    toks = []
+    for _ in range(steps):
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks.append(int(tok[0, 0]))
+        logits, caches = step(params, caches, tok)
+    dt = (time.perf_counter() - t0) / steps * 1e3
+    cache_mb = sum(l.size * l.dtype.itemsize
+                   for l in jax.tree.leaves(caches)) / 2**20
+    mode = "rolling-window" if rolling else "full-cache"
+    print(f"{arch:22s} [{mode:14s}] {dt:7.2f} ms/token  "
+          f"cache {cache_mb:7.1f} MiB  tokens {toks[:6]}...")
+
+
+def main():
+    print("batched greedy decode, reduced configs, CPU:")
+    decode_demo("qwen2-7b")               # GQA full cache
+    decode_demo("deepseek-v3-671b")       # MLA compressed-latent cache
+    decode_demo("mamba2-1.3b")            # SSM constant state
+    decode_demo("recurrentgemma-9b")      # hybrid RG-LRU + local attn
+    decode_demo("qwen2-7b", rolling=True)  # sliding-window long-context mode
+
+
+if __name__ == "__main__":
+    main()

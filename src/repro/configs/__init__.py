@@ -1,0 +1,3 @@
+from repro.configs.base import ModelConfig  # noqa: F401
+from repro.configs.registry import get_config, list_archs  # noqa: F401
+from repro.configs.shapes import INPUT_SHAPES, InputShape  # noqa: F401

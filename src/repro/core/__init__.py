@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — community-based layerwise ADMM training.
+
+- graph:        Ã construction, community partitioner, blocked layout
+- gcn:          the GCN model in the paper's notation
+- subproblems:  W/Z/U ADMM updates (global form), backtracking, FISTA
+- messages:     first/second-order community messages (Appendix A, eq. 4)
+- serial:       the paper's Serial ADMM trainer + SGD-family baselines
+- parallel:     the paper's Parallel ADMM trainer (shard_map over agents)
+- layerwise:    the technique generalized to transformer stacks (beyond-GCN)
+"""
+from repro.core.gcn import GCNConfig  # noqa: F401
+from repro.core.subproblems import ADMMConfig  # noqa: F401

@@ -1,0 +1,77 @@
+"""GCN model (Kipf & Welling) in the paper's notation.
+
+``Z_l = f_l(Ã Z_{l-1} W_l)`` for l < L and ``Z_L = Ã Z_{L-1} W_L`` (logits).
+Used both by the ADMM trainers (as the constraint functions) and by the
+SGD-family baselines (plain backprop training, §4.2 comparison methods).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    layer_dims: tuple[int, ...]   # (C_0, C_1, ..., C_L)
+    activation: str = "relu"      # f_l for l < L
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_dims) - 1
+
+
+def activation_fn(name: str) -> Callable[[Array], Array]:
+    return {"relu": jax.nn.relu, "tanh": jnp.tanh,
+            "identity": lambda x: x}[name]
+
+
+def init_weights(cfg: GCNConfig, key: jax.Array) -> list[Array]:
+    """Glorot init, one W_l per layer."""
+    ws = []
+    for l in range(cfg.num_layers):
+        key, sub = jax.random.split(key)
+        fan_in, fan_out = cfg.layer_dims[l], cfg.layer_dims[l + 1]
+        scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+        ws.append(scale * jax.random.normal(sub, (fan_in, fan_out),
+                                            dtype=jnp.float32))
+    return ws
+
+
+def forward(cfg: GCNConfig, a_tilde: Array, z0: Array,
+            weights: Sequence[Array]) -> list[Array]:
+    """Full forward pass; returns [Z_1, ..., Z_L] (Z_L = logits)."""
+    f = activation_fn(cfg.activation)
+    zs = []
+    z = z0
+    num_layers = cfg.num_layers
+    for l, w in enumerate(weights):
+        z = a_tilde @ z @ w
+        if l < num_layers - 1:
+            z = f(z)
+        zs.append(z)
+    return zs
+
+
+def masked_cross_entropy(logits: Array, labels: Array, mask: Array) -> Array:
+    """R(Z_L, Y): mean cross-entropy over masked (labeled) nodes."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1)
+    return jnp.sum(nll * mask) / denom
+
+
+def accuracy(logits: Array, labels: Array, mask: Array) -> Array:
+    pred = jnp.argmax(logits, axis=-1)
+    hits = (pred == labels) * mask
+    return hits.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def loss_fn(cfg: GCNConfig, a_tilde: Array, z0: Array,
+            weights: Sequence[Array], labels: Array, mask: Array) -> Array:
+    logits = forward(cfg, a_tilde, z0, weights)[-1]
+    return masked_cross_entropy(logits, labels, mask)

@@ -1,0 +1,233 @@
+"""Graph substrate for the community-based ADMM GCN trainer.
+
+Host-side (numpy) utilities: normalized adjacency construction, balanced
+community partitioning (METIS stand-in, same contract), community-blocked
+dense layout used by the shard_map parallel trainer and the Pallas
+``community_spmm`` kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected, unweighted graph with node features and labels."""
+
+    edges: Array          # (E, 2) int32, undirected (each edge stored once)
+    features: Array       # (N, C0) float32
+    labels: Array         # (N,) int32
+    train_mask: Array     # (N,) bool
+    test_mask: Array      # (N,) bool
+    num_classes: int
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.features.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+
+def adjacency_lists(num_nodes: int, edges: Array) -> list[list[int]]:
+    adj: list[list[int]] = [[] for _ in range(num_nodes)]
+    for u, v in edges:
+        if u != v:
+            adj[int(u)].append(int(v))
+            adj[int(v)].append(int(u))
+    return adj
+
+
+def normalized_adjacency(num_nodes: int, edges: Array) -> Array:
+    """Dense Ã = (D+I)^{-1/2} (A+I) (D+I)^{-1/2} (paper, Problem 1)."""
+    a = np.zeros((num_nodes, num_nodes), dtype=np.float32)
+    u, v = edges[:, 0], edges[:, 1]
+    a[u, v] = 1.0
+    a[v, u] = 1.0
+    np.fill_diagonal(a, 0.0)
+    deg = a.sum(axis=1)
+    a = a + np.eye(num_nodes, dtype=np.float32)
+    d_inv_sqrt = 1.0 / np.sqrt(deg + 1.0)
+    return (a * d_inv_sqrt[:, None]) * d_inv_sqrt[None, :]
+
+
+def partition_graph(num_nodes: int, edges: Array, num_parts: int,
+                    seed: int = 0, refine_iters: int = 4) -> Array:
+    """Balanced edge-cut-minimizing partition (METIS stand-in).
+
+    BFS-grown balanced seeds followed by Kernighan-Lin-style boundary
+    refinement under a hard balance cap. Returns (N,) int32 community ids.
+    """
+    rng = np.random.default_rng(seed)
+    adj = adjacency_lists(num_nodes, edges)
+    cap = int(np.ceil(num_nodes / num_parts))
+    part = np.full(num_nodes, -1, dtype=np.int32)
+    sizes = np.zeros(num_parts, dtype=np.int64)
+
+    # BFS-grow each partition from a fresh unassigned seed.
+    order = rng.permutation(num_nodes)
+    cursor = 0
+    for p in range(num_parts):
+        # find an unassigned seed
+        while cursor < num_nodes and part[order[cursor]] >= 0:
+            cursor += 1
+        if cursor >= num_nodes:
+            break
+        frontier = [int(order[cursor])]
+        while frontier and sizes[p] < cap:
+            node = frontier.pop(0)
+            if part[node] >= 0:
+                continue
+            part[node] = p
+            sizes[p] += 1
+            frontier.extend(n for n in adj[node] if part[n] < 0)
+    # Any stragglers go to the least-loaded part.
+    for node in np.flatnonzero(part < 0):
+        p = int(np.argmin(sizes))
+        part[node] = p
+        sizes[p] += 1
+
+    # KL-style refinement: move boundary nodes if it reduces the cut and
+    # keeps balance.
+    for _ in range(refine_iters):
+        moved = 0
+        for node in rng.permutation(num_nodes):
+            if not adj[node]:
+                continue
+            counts = np.bincount([part[n] for n in adj[node]],
+                                 minlength=num_parts)
+            best = int(np.argmax(counts))
+            cur = int(part[node])
+            if best != cur and counts[best] > counts[cur] and \
+                    sizes[best] < cap and sizes[cur] > 1:
+                part[node] = best
+                sizes[cur] -= 1
+                sizes[best] += 1
+                moved += 1
+        if moved == 0:
+            break
+    return part
+
+
+def edge_cut(edges: Array, part: Array) -> int:
+    return int(np.sum(part[edges[:, 0]] != part[edges[:, 1]]))
+
+
+@dataclasses.dataclass(frozen=True)
+class CommunityLayout:
+    """Community-blocked layout of a graph (paper §2, Fig. 1).
+
+    Nodes are permuted so community m occupies rows [m*n_pad, m*n_pad+n_m);
+    every community is padded to ``n_pad``. ``a_blocks[m, r]`` is the dense
+    Ã_{m,r} block; ``neighbor_mask[m, r]`` marks r ∈ N_m ∪ {m} (nonzero
+    blocks) — the paper's first-order communication topology.
+    """
+
+    num_parts: int
+    n_pad: int
+    perm: Array            # (N,) original index of packed slot (padded: -1)
+    a_blocks: Array        # (M, M, n_pad, n_pad) float32
+    node_mask: Array       # (M, n_pad) bool  (True = real node)
+    neighbor_mask: Array   # (M, M) bool
+    sizes: Array           # (M,) int
+
+    def pack(self, x: Array, fill: float = 0.0) -> Array:
+        """(N, ...) node array -> (M, n_pad, ...) community-blocked array."""
+        out_shape = (self.num_parts * self.n_pad,) + x.shape[1:]
+        out = np.full(out_shape, fill, dtype=x.dtype)
+        valid = self.perm >= 0
+        out[valid.nonzero()[0]] = x[self.perm[valid]]
+        return out.reshape((self.num_parts, self.n_pad) + x.shape[1:])
+
+    def unpack(self, x: Array) -> Array:
+        """(M, n_pad, ...) -> (N, ...) in original node order."""
+        flat = x.reshape((self.num_parts * self.n_pad,) + x.shape[2:])
+        n = int((self.perm >= 0).sum())
+        out = np.zeros((n,) + x.shape[2:], dtype=x.dtype)
+        valid = self.perm >= 0
+        out[self.perm[valid]] = flat[valid.nonzero()[0]]
+        return out
+
+
+def build_community_layout(num_nodes: int, edges: Array, part: Array,
+                           pad_to: int | None = None) -> CommunityLayout:
+    num_parts = int(part.max()) + 1
+    sizes = np.bincount(part, minlength=num_parts)
+    n_pad = int(sizes.max()) if pad_to is None else int(pad_to)
+    # round pad up to a multiple of 8 (TPU sublane) for kernel friendliness
+    n_pad = -(-n_pad // 8) * 8
+
+    a_tilde = normalized_adjacency(num_nodes, edges)
+    perm = np.full(num_parts * n_pad, -1, dtype=np.int64)
+    slot_of = np.zeros(num_nodes, dtype=np.int64)
+    for m in range(num_parts):
+        members = np.flatnonzero(part == m)
+        perm[m * n_pad: m * n_pad + len(members)] = members
+        slot_of[members] = m * n_pad + np.arange(len(members))
+
+    big = np.zeros((num_parts * n_pad, num_parts * n_pad), dtype=np.float32)
+    valid = np.flatnonzero(perm >= 0)
+    big[np.ix_(valid, valid)] = a_tilde[np.ix_(perm[valid], perm[valid])]
+    a_blocks = (big.reshape(num_parts, n_pad, num_parts, n_pad)
+                   .transpose(0, 2, 1, 3).copy())
+
+    node_mask = (perm >= 0).reshape(num_parts, n_pad)
+    neighbor_mask = (np.abs(a_blocks).sum(axis=(2, 3)) > 0)
+    np.fill_diagonal(neighbor_mask, True)
+    return CommunityLayout(num_parts=num_parts, n_pad=n_pad, perm=perm,
+                           a_blocks=a_blocks.astype(np.float32),
+                           node_mask=node_mask, neighbor_mask=neighbor_mask,
+                           sizes=sizes)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic benchmark graphs (Amazon Computers / Photo statistics, Table 2).
+# The real datasets are unavailable offline; we match N / features / classes /
+# train-test counts with a stochastic block model whose blocks align with the
+# label classes, so community structure (the paper's premise) is present.
+# ---------------------------------------------------------------------------
+
+DATASET_STATS = {
+    # name: (nodes, train, test, classes, features, avg_degree)
+    "amazon_computers": (13752, 1000, 1000, 10, 767, 35.8),
+    "amazon_photo": (7650, 800, 1000, 8, 745, 31.1),
+    "amazon_computers_mini": (2752, 600, 600, 10, 767, 18.0),
+    "amazon_photo_mini": (1530, 400, 400, 8, 745, 16.0),
+}
+
+
+def synthetic_sbm(name: str = "amazon_computers_mini", seed: int = 0,
+                  p_in_out_ratio: float = 12.0) -> Graph:
+    if name not in DATASET_STATS:
+        raise KeyError(f"unknown dataset {name!r}; have {list(DATASET_STATS)}")
+    n, n_train, n_test, k, c0, deg = DATASET_STATS[name]
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, k, size=n).astype(np.int32)
+
+    # SBM edge sampling: expected degree ``deg``, within-class edges
+    # p_in_out_ratio times likelier than cross-class.
+    p_out = deg / (n * (p_in_out_ratio / k + (1 - 1 / k)))
+    p_in = p_in_out_ratio * p_out
+    same = labels[:, None] == labels[None, :]
+    prob = np.where(same, p_in, p_out)
+    upper = np.triu(rng.random((n, n)) < prob, k=1)
+    edges = np.argwhere(upper).astype(np.int32)
+
+    # class-informative Gaussian features
+    centers = rng.normal(0.0, 1.0, size=(k, c0)).astype(np.float32)
+    feats = centers[labels] + rng.normal(0, 1.2, size=(n, c0)).astype(np.float32)
+    feats /= np.linalg.norm(feats, axis=1, keepdims=True) + 1e-8
+
+    order = rng.permutation(n)
+    train_mask = np.zeros(n, dtype=bool)
+    test_mask = np.zeros(n, dtype=bool)
+    train_mask[order[:n_train]] = True
+    test_mask[order[n_train:n_train + n_test]] = True
+    return Graph(edges=edges, features=feats, labels=labels,
+                 train_mask=train_mask, test_mask=test_mask, num_classes=k)

@@ -1,0 +1,309 @@
+"""Layerwise ADMM for transformer stacks — the paper's technique beyond GCN.
+
+The GCN trainer splits *graph nodes* into communities and *layers* into
+independent ADMM blocks.  For the assigned architectures the same two axes
+map onto the mesh (DESIGN.md §3):
+
+  * layer splitting  -> the stacked layer axis (L, ...) of every segment is
+    sharded over the ``model`` mesh axis.  All W_b and Z_b subproblems are
+    data-local to their shard; the ONLY inter-block communication is the
+    shifted activation Z_{b-1}, a collective-permute along ``model`` — a
+    bubble-free "pipeline" which is exactly Algorithm 1's layer parallelism.
+  * community splitting -> the batch/token axis shards over ``data``
+    (sequences are the "communities"; with full attention inside a block
+    there is no cross-shard halo, so the Z subproblems are embarrassingly
+    parallel over data — the GCN's p/s messages have no analogue here and
+    communication drops out entirely).
+
+Subproblems mirror subproblems.py: quadratic-approximation steps with
+per-(segment, block) backtracking (lane-masked over the stacked layer dim),
+FISTA for the head/readout, dual ascent on the last constraint.
+
+Scope: trains the stack weights W (all segments) + readout by ADMM on a
+fixed batch (the paper's full-batch regime).  Embedding inputs Z_0 are the
+(frozen-embedding) features, as in the paper where Z_0 is the input matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.subproblems import ADMMConfig
+from repro.models import layers as L
+from repro.models import transformer
+from repro.models.build import Model, _next_token_ce
+
+Array = jax.Array
+
+
+class LayerwiseState(NamedTuple):
+    stack: Any                 # stacked per-segment weights (as Model)
+    readout: Any               # final_norm + unembed params
+    zs: dict                   # segment -> (n_layers, B, S, D) activations
+    u: Array                   # dual for the last constraint (B, S, D)
+    taus: dict                 # segment -> (n_layers,) curvatures for W
+    thetas: dict               # segment -> (n_layers,) curvatures for Z
+    tau_r: Array               # readout curvature
+
+
+def _tree_lane_norm_sq(tree, lanes: int):
+    """Per-lane squared norms over a pytree with leading lane dim."""
+    total = jnp.zeros((lanes,), jnp.float32)
+    for leaf in jax.tree.leaves(tree):
+        total += jnp.sum(
+            jnp.square(leaf.astype(jnp.float32)).reshape(lanes, -1), axis=1)
+    return total
+
+
+def lane_backtracking_tree(obj_lanes: Callable, x, theta0: Array,
+                           admm: ADMMConfig):
+    """Per-lane majorize-minimize step on a PYTREE with leading lane dim.
+
+    obj_lanes(x) -> (lanes,).  Lanes accept independently (paper's per-block
+    τ_l / per-community θ_{l,m}); frozen lanes stop doubling.
+    """
+    lanes = theta0.shape[0]
+    vals = obj_lanes(x)
+    grads = jax.grad(lambda t: obj_lanes(t).sum())(x)
+    g_sq = _tree_lane_norm_sq(grads, lanes)
+
+    def step(theta):
+        inv = 1.0 / theta
+        return jax.tree.map(
+            lambda xx, gg: (xx.astype(jnp.float32)
+                            - gg.astype(jnp.float32)
+                            * inv.reshape((lanes,) + (1,) * (gg.ndim - 1))
+                            ).astype(xx.dtype), x, grads)
+
+    def accepted(theta):
+        bound = vals - 0.5 * g_sq / theta
+        tol = admm.backtrack_rtol * (jnp.abs(bound) + 1e-12)
+        return obj_lanes(step(theta)) <= bound + tol
+
+    def cond(carry):
+        theta, done, it = carry
+        return (~jnp.all(done)) & (it < admm.max_backtracks)
+
+    def body(carry):
+        theta, done, it = carry
+        theta = jnp.where(done, theta, theta * admm.backtrack_growth)
+        done = done | accepted(theta)
+        return theta, done, it + 1
+
+    theta0 = jnp.maximum(theta0 / admm.backtrack_growth, 1e-8)
+    theta, _, _ = jax.lax.while_loop(cond, body,
+                                     (theta0, accepted(theta0),
+                                      jnp.asarray(0)))
+    return step(theta), theta
+
+
+@dataclasses.dataclass
+class LayerwiseADMMTrainer:
+    """Blockwise-ADMM training of a transformer on a fixed batch."""
+
+    cfg: ModelConfig
+    admm: ADMMConfig
+    mesh: Mesh | None = None
+
+    def __post_init__(self):
+        self.cfg = dataclasses.replace(self.cfg, remat=False)
+        self.model = Model(self.cfg)
+        self.segments = [s for s in transformer.arch_segments(self.cfg)
+                         if s.kind != "enc"]
+
+    # -------------------------------------------------------------- helpers
+
+    def _constraint_spec(self):
+        """Sharding: blocks over 'model', batch over 'data'."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P("model", "data", None, None))
+
+    def _shard_z(self, z):
+        spec = self._constraint_spec()
+        return z if spec is None else jax.lax.with_sharding_constraint(z, spec)
+
+    def _apply_blocks(self, kind: str, stacked_w, inputs):
+        """vmap a single block over the stacked layer axis: F_b(Z_{b-1})."""
+        def one(w, x):
+            out, _ = transformer.apply_layer(self.cfg, kind, w, x)
+            return out
+        return jax.vmap(one)(stacked_w, inputs)
+
+    def _shifted_inputs(self, z0: Array, zs: Array) -> Array:
+        """[Z_0, Z_1, ..., Z_{L-1}]: one collective-permute along 'model'."""
+        return jnp.concatenate([z0[None], zs[:-1]], axis=0)
+
+    def _readout_logits(self, readout, z_last):
+        h = L.apply_norm(self.cfg, readout["final_norm"], z_last)
+        return L.unembed(self.cfg, readout["embedding"], h)
+
+    # ----------------------------------------------------------------- init
+
+    def init(self, key, batch: dict) -> LayerwiseState:
+        params = self.model.init(key)
+        z0 = self.model._embed_inputs(params, batch)
+        zs, taus, thetas = {}, {}, {}
+        x = z0
+        for seg in self.segments:
+            stacked = params["stack"][seg.kind]
+            outs = []
+            for b in range(seg.count):
+                w_b = jax.tree.map(lambda l, b=b: l[b], stacked)
+                x, _ = transformer.apply_layer(self.cfg, seg.kind, w_b, x)
+                outs.append(x)
+            zs[seg.kind] = self._shard_z(jnp.stack(outs, axis=0))
+            taus[seg.kind] = jnp.full((seg.count,), self.admm.tau_init)
+            thetas[seg.kind] = jnp.full((seg.count,), self.admm.tau_init)
+        readout = {"final_norm": params["final_norm"],
+                   "embedding": params["embedding"]}
+        u = jnp.zeros_like(zs[self.segments[-1].kind][-1],
+                           dtype=jnp.float32)
+        return LayerwiseState(params["stack"], readout, zs, u, taus, thetas,
+                              jnp.asarray(self.admm.tau_init)), z0
+
+    # ------------------------------------------------------------ iteration
+
+    def iteration(self, state: LayerwiseState, z0: Array,
+                  targets: Array) -> LayerwiseState:
+        admm, cfg = self.admm, self.cfg
+        segs = self.segments
+        last_kind = segs[-1].kind
+
+        # ---- W update: all blocks of all segments in parallel (Jacobi) ----
+        new_stack, new_taus = {}, {}
+        seg_in = z0
+        for seg in segs:
+            zsk = state.zs[seg.kind]
+            inputs = self._shifted_inputs(seg_in, zsk)
+            is_last_seg = seg.kind == last_kind
+
+            def w_obj(stacked_w, zsk=zsk, inputs=inputs, seg=seg,
+                      is_last=is_last_seg):
+                pred = self._apply_blocks(seg.kind, stacked_w, inputs)
+                r = (zsk - pred).astype(jnp.float32)
+                vals = 0.5 * admm.nu * jnp.sum(
+                    r * r, axis=tuple(range(1, r.ndim)))
+                if is_last:
+                    # last block carries the augmented-Lagrangian terms
+                    r_last = r[-1]
+                    lin = jnp.sum(state.u * r_last)
+                    quad = 0.5 * (admm.rho - admm.nu) * jnp.sum(
+                        r_last * r_last)
+                    vals = vals.at[-1].add(lin + quad)
+                return vals
+
+            new_w, tau = lane_backtracking_tree(
+                w_obj, state.stack[seg.kind], state.taus[seg.kind], admm)
+            new_stack[seg.kind] = new_w
+            new_taus[seg.kind] = tau
+            seg_in = zsk[-1]
+
+        # ---- readout update (R's own parameters, gradient step) ----
+        z_last = state.zs[last_kind][-1]
+
+        def r_obj(readout):
+            return _next_token_ce(self._readout_logits(readout, z_last),
+                                  targets)
+
+        (new_readout, tau_r) = lane_backtracking_tree(
+            lambda ro: r_obj(ro)[None],
+            state.readout, state.tau_r[None], admm)
+        tau_r = tau_r[0]
+
+        # ---- Z update: all blocks in parallel (reads W^{k+1}, Z^k) ----
+        new_zs, new_thetas = {}, {}
+        seg_in = z0
+        for si, seg in enumerate(segs):
+            zsk = state.zs[seg.kind]
+            w_new = new_stack[seg.kind]
+            inputs = self._shifted_inputs(seg_in, zsk)
+            targets_blocks = self._apply_blocks(seg.kind, w_new, inputs)
+            is_last_seg = seg.kind == last_kind
+
+            # next-block coupling: F_{b+1}(Z_b) vs Z_{b+1}^k — the "next"
+            # of the final block of segment si is the first block of si+1
+            if is_last_seg:
+                next_w = jax.tree.map(lambda l: l[1:], w_new)
+                next_kind = seg.kind
+                z_next_ref = zsk[1:]
+            else:
+                nseg = segs[si + 1]
+                next_w = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a[1:], b[:1]], 0),
+                    w_new, new_stack[nseg.kind]) \
+                    if nseg.kind == seg.kind else None
+                next_kind = seg.kind
+                z_next_ref = zsk[1:]
+
+            def z_obj(zsk_var, targets_blocks=targets_blocks, seg=seg,
+                      w_new=w_new, zsk=zsk, is_last=is_last_seg):
+                r1 = (zsk_var - targets_blocks).astype(jnp.float32)
+                vals = 0.5 * admm.nu * jnp.sum(
+                    r1 * r1, axis=tuple(range(1, r1.ndim)))
+                # coupling: blocks 0..L-2 feed block b+1 (within segment)
+                w_next = jax.tree.map(lambda l: l[1:], w_new)
+                pred_next = self._apply_blocks(seg.kind, w_next,
+                                               zsk_var[:-1])
+                r2 = (zsk[1:] - pred_next).astype(jnp.float32)
+                v2 = 0.5 * admm.nu * jnp.sum(
+                    r2 * r2, axis=tuple(range(1, r2.ndim)))
+                if is_last:
+                    r2_last = r2[-1] if v2.shape[0] else None
+                    if r2_last is not None:
+                        lin = jnp.sum(state.u * r2_last)
+                        quad = 0.5 * (admm.rho - admm.nu) * jnp.sum(
+                            r2_last * r2_last)
+                        v2 = v2.at[-1].add(lin + quad)
+                vals = vals.at[:-1].add(v2)
+                # last block of last segment: CE readout term
+                if is_last:
+                    ce = _next_token_ce(
+                        self._readout_logits(new_readout, zsk_var[-1]),
+                        targets)
+                    vals = vals.at[-1].add(ce)
+                return vals
+
+            z_new, theta = lane_backtracking_tree(
+                z_obj, zsk, state.thetas[seg.kind], admm)
+            new_zs[seg.kind] = self._shard_z(z_new)
+            new_thetas[seg.kind] = theta
+            seg_in = zsk[-1]
+
+        # ---- dual ascent on the last constraint ----
+        seg = segs[-1]
+        zsk_new = new_zs[seg.kind]
+        prev_in = z0 if len(segs) == 1 and seg.count == 1 else (
+            zsk_new[-2] if seg.count > 1 else new_zs[segs[-2].kind][-1])
+        w_last = jax.tree.map(lambda l: l[-1], new_stack[seg.kind])
+        pred_last, _ = transformer.apply_layer(cfg, seg.kind, w_last,
+                                               prev_in)
+        residual = (zsk_new[-1] - pred_last).astype(jnp.float32)
+        new_u = state.u + admm.rho * residual
+
+        return LayerwiseState(new_stack, new_readout, new_zs, new_u,
+                              new_taus, new_thetas, tau_r)
+
+    # ---------------------------------------------------------------- train
+
+    def metrics(self, state: LayerwiseState, z0: Array, targets: Array):
+        """CE of the *composed* network (no auxiliary Z) + residual norm."""
+        x = z0
+        for seg in self.segments:
+            def body(carry, w):
+                out, _ = transformer.apply_layer(self.cfg, seg.kind, w,
+                                                 carry)
+                return out, None
+            x, _ = jax.lax.scan(body, x, state.stack[seg.kind])
+        ce = _next_token_ce(self._readout_logits(state.readout, x), targets)
+        last = self.segments[-1].kind
+        res = jnp.linalg.norm(
+            (state.zs[last][-1] - x).astype(jnp.float32)) / \
+            jnp.sqrt(jnp.asarray(x.size, jnp.float32))
+        return ce, res

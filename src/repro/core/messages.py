@@ -1,0 +1,76 @@
+"""First/second-order community messages (paper Appendix A, eq. 4).
+
+In the paper, community ``m`` needs, for its ``Z_{l,m}`` subproblem:
+
+  p_{l,r→m}  = Ã_{m,r} Z_{l,r} W_{l+1}                    (first order)
+  s_{l,r→m}  = [Z_{l+1,r},  Σ_{r'∈N_r∪{r}\\{m}} p_{l,r'→r}]  (second order)
+
+and eq. (4) shows the second-order payload is assembled by community r from
+its *received* first-order messages — no second-hop communication.
+
+On a TPU mesh the agents are shards on the ``comm`` axis.  The quantity each
+community relays is its full first-order aggregate
+
+  q_{l,r} = Σ_{r'∈N_r∪{r}} p_{l,r'→r} = (Σ_{r'} Ã_{r,r'} Z_{l,r'}) W_{l+1}
+
+from which the receiver reconstructs the paper's s-message by subtracting its
+own contribution:  s²_{l,r→m} = q_{l,r} − Ã_{r,m} Z_{l,m} W_{l+1}  (using
+Ã_{r,m} = Ã_{m,r}ᵀ, Ã symmetric).  This file provides those helpers; the
+shard_map trainer in ``parallel.py`` uses them, and tests assert equality
+with the paper's literal per-neighbour message formulas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def row_aggregate(a_row: Array, z_all: Array) -> Array:
+    """Σ_r Ã_{m,r} Z_r — community m's first-order aggregation.
+
+    a_row: (M, n_pad, n_pad) — m's row of Ã blocks (Ã_{m,r} for all r)
+    z_all: (M, n_pad, C)     — all communities' Z (gathered)
+    returns (n_pad, C)
+    """
+    return jnp.einsum("rip,rpc->ic", a_row, z_all)
+
+
+def first_order_messages(a_row: Array, z_all: Array, w_next: Array) -> Array:
+    """Stacked p_{l,r→m} for all r: (M, n_pad, C_next).  p[r] = Ã_{m,r} Z_r W."""
+    return jnp.einsum("rip,rpc->ric", a_row, z_all) @ w_next
+
+
+def relay_aggregate(a_row: Array, z_all: Array, w_next: Array) -> Array:
+    """q_{l,m} = (Σ_r Ã_{m,r} Z_r) W_{l+1} — the payload community m relays."""
+    return row_aggregate(a_row, z_all) @ w_next
+
+
+def second_order_from_relay(q_all: Array, a_row: Array, z_local: Array,
+                            w_next: Array) -> Array:
+    """s²_{l,r→m} for all r, reconstructed receiver-side (eq. 4).
+
+    q_all:   (M, n_pad, C_next) — gathered relay aggregates q_{l,r}
+    a_row:   (M, n_pad, n_pad)  — Ã_{m,r}; Ã_{r,m} = Ã_{m,r}ᵀ
+    z_local: (n_pad, C_l)       — Z_{l,m}
+    returns  (M, n_pad, C_next)
+    """
+    own_contrib = jnp.einsum("rnp,nc->rpc", a_row, z_local @ w_next)
+    return q_all - own_contrib
+
+
+def neighbor_preactivations(q_all: Array, a_row: Array, z_var: Array,
+                            z_ref: Array, w_next: Array) -> Array:
+    """Pre-activations of *every* community's next layer as a function of
+    this community's variable ``z_var`` (with all other communities frozen
+    at their k-th iterates, already baked into ``q_all`` via ``z_ref``):
+
+        pre[r] = q_{l,r} + Ã_{r,m} (z_var − z_ref) W_{l+1}
+               = s²_{l,r→m} + Ã_{r,m} z_var W_{l+1}
+
+    For r ∉ N_m the Ã block is zero, so pre[r] is constant in z_var (those
+    terms drop out of the gradient — the paper's neighbour-only coupling).
+    """
+    delta = (z_var - z_ref) @ w_next
+    return q_all + jnp.einsum("rnp,nc->rpc", a_row, delta)

@@ -1,0 +1,419 @@
+"""Parallel (community-distributed) ADMM trainer — Algorithm 1 on a mesh.
+
+Each shard on the ``comm`` mesh axis hosts ``k = M / n_shards`` community
+agents (the paper's agents; k=1 when every community gets its own device).
+One ADMM iteration is a single ``shard_map``-ed program:
+
+  * W update — layer-parallel (Jacobi): per-shard φ contributions and grads
+    are ``psum``-ed; the backtracking condition is evaluated on the global
+    objective, so every shard takes the identical accepted τ step (this
+    replaces the paper's dedicated agent M+1 with a replicated computation —
+    TPU-native, no parameter server).
+  * Z update — community-parallel: each community solves its ψ_{l,m}
+    (eq. 5/6) locally from gathered relay aggregates (messages.py) with its
+    own backtracking θ_{l,m} (lane-masked, so communities sharing a device
+    still line-search independently); Z_L via per-community FISTA (eq. 7).
+  * U update — local dual ascent (eq. 3).
+
+Communication per iteration = all-gathers of Z/U/q (the roofline
+'collective' term); the paper's p/s messages are exactly the gathered relay
+aggregates, see messages.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import gcn, graph, messages
+from repro.core.subproblems import ADMMConfig
+from repro.util import shard_map
+from repro.util.compat import make_mesh
+
+Array = jax.Array
+AXIS = "comm"
+
+
+class ParallelState(NamedTuple):
+    weights: tuple[Array, ...]   # replicated
+    zs: tuple[Array, ...]        # (M, n_pad, C_l), sharded over comm
+    u: Array                     # (M, n_pad, C_L), sharded
+    taus: tuple[Array, ...]      # scalars, replicated
+    thetas: tuple[Array, ...]    # (M,), sharded
+
+
+@dataclasses.dataclass(frozen=True)
+class CommunityData:
+    """Device-ready community-blocked graph tensors."""
+    a_blocks: Array      # (M, M, n_pad, n_pad)
+    z0: Array            # (M, n_pad, C0)
+    labels: Array        # (M, n_pad) int32
+    train_mask: Array    # (M, n_pad) float32
+    test_mask: Array     # (M, n_pad) float32
+    neighbor_mask: Array  # (M, M) bool
+    denom: Array         # scalar — global labeled-node count
+
+    @property
+    def num_parts(self) -> int:
+        return int(self.a_blocks.shape[0])
+
+
+def community_data(g: graph.Graph, layout: graph.CommunityLayout) -> CommunityData:
+    return CommunityData(
+        a_blocks=jnp.asarray(layout.a_blocks),
+        z0=jnp.asarray(layout.pack(g.features)),
+        labels=jnp.asarray(layout.pack(g.labels.astype(np.int32))),
+        train_mask=jnp.asarray(layout.pack(g.train_mask.astype(np.float32))),
+        test_mask=jnp.asarray(layout.pack(g.test_mask.astype(np.float32))),
+        neighbor_mask=jnp.asarray(layout.neighbor_mask),
+        denom=jnp.asarray(float(g.train_mask.sum())),
+    )
+
+
+# ---------------------------------------------------------------------------
+# backtracking primitives
+# ---------------------------------------------------------------------------
+
+def backtracking_step_psum(local_obj, x, tau0, admm: ADMMConfig):
+    """Majorize-minimize step on the *global* objective psum(local_obj):
+    every shard evaluates the same condition and accepts the same τ."""
+    val_loc, grad_loc = jax.value_and_grad(local_obj)(x)
+    val = jax.lax.psum(val_loc, AXIS)
+    grad = jax.lax.psum(grad_loc, AXIS)
+    g_sq = jnp.vdot(grad, grad).real
+
+    def global_obj(w):
+        return jax.lax.psum(local_obj(w), AXIS)
+
+    def cond(carry):
+        tau, it = carry
+        x_new = x - grad / tau
+        bound = val - 0.5 * g_sq / tau
+        tol = admm.backtrack_rtol * (jnp.abs(bound) + 1e-12)
+        return (bound + tol < global_obj(x_new)) & \
+            (it < admm.max_backtracks)
+
+    def body(carry):
+        tau, it = carry
+        return tau * admm.backtrack_growth, it + 1
+
+    tau0 = jnp.maximum(tau0 / admm.backtrack_growth, 1e-8)
+    tau, _ = jax.lax.while_loop(cond, body, (tau0, jnp.asarray(0)))
+    return x - grad / tau, tau
+
+
+def backtracking_step_lanes(obj_lanes, x, theta0, admm: ADMMConfig):
+    """Per-lane majorize-minimize step (paper's per-(l,m) θ backtracking).
+
+    obj_lanes: (k, n, C) -> (k,) per-community objective values.
+    x: (k, n, C); theta0: (k,).  Lanes line-search independently: the loop
+    runs until every lane accepts, frozen lanes stop doubling.
+    """
+    vals = obj_lanes(x)                                  # (k,)
+    grads = jax.grad(lambda z: obj_lanes(z).sum())(x)    # (k, n, C) separable
+    g_sq = jnp.sum(grads * grads, axis=(1, 2))           # (k,)
+
+    def accepted(theta):
+        x_new = x - grads / theta[:, None, None]
+        bound = vals - 0.5 * g_sq / theta
+        tol = admm.backtrack_rtol * (jnp.abs(bound) + 1e-12)
+        return bound + tol >= obj_lanes(x_new)
+
+    def cond(carry):
+        theta, done, it = carry
+        return (~jnp.all(done)) & (it < admm.max_backtracks)
+
+    def body(carry):
+        theta, done, it = carry
+        theta = jnp.where(done, theta, theta * admm.backtrack_growth)
+        done = done | accepted(theta)
+        return theta, done, it + 1
+
+    theta0 = jnp.maximum(theta0 / admm.backtrack_growth, 1e-8)
+    done0 = accepted(theta0)
+    theta, _, _ = jax.lax.while_loop(cond, body,
+                                     (theta0, done0, jnp.asarray(0)))
+    return x - grads / theta[:, None, None], theta
+
+
+def fista_lanes(admm: ADMMConfig, b, u, labels, mask, z_init, denom):
+    """Eq. (7) per community lane: R(Z,Y_m) + ⟨U_m, Z−B_m⟩ + ρ/2‖Z−B_m‖².
+
+    All arrays carry a leading lane dim k; each lane runs its own Lipschitz
+    backtracking (lane-masked), so communities on the same device still
+    solve their subproblems exactly as independent agents would.
+    """
+
+    def obj_lanes(z):                                    # (k,) values
+        logp = jax.nn.log_softmax(z, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.sum(nll * mask, axis=1) / denom
+        r = z - b
+        lin = jnp.sum(u * r, axis=(1, 2))
+        quad = 0.5 * admm.rho * jnp.sum(r * r, axis=(1, 2))
+        return ce + lin + quad
+
+    grad_fn = jax.grad(lambda z: obj_lanes(z).sum())
+
+    def step(carry, _):
+        z, y, t, lip = carry
+        vals_y = obj_lanes(y)
+        g = grad_fn(y)
+        g_sq = jnp.sum(g * g, axis=(1, 2))
+
+        def accepted(lip):
+            z_new = y - g / lip[:, None, None]
+            bound = vals_y - 0.5 * g_sq / lip
+            tol = admm.backtrack_rtol * (jnp.abs(bound) + 1e-12)
+            return obj_lanes(z_new) <= bound + tol
+
+        def cond(carry):
+            lip, done, it = carry
+            return (~jnp.all(done)) & (it < admm.max_backtracks)
+
+        def body(carry):
+            lip, done, it = carry
+            lip = jnp.where(done, lip, lip * admm.backtrack_growth)
+            done = done | accepted(lip)
+            return lip, done, it + 1
+
+        lip, _, _ = jax.lax.while_loop(
+            cond, body, (lip, accepted(lip), jnp.asarray(0)))
+        z_new = y - g / lip[:, None, None]
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_new = z_new + ((t - 1.0) / t_new) * (z_new - z)
+        return (z_new, y_new, t_new, lip * 0.9), None
+
+    k = z_init.shape[0]
+    init = (z_init, z_init, jnp.asarray(1.0),
+            jnp.full((k,), admm.rho + 1.0))
+    (z, _, _, _), _ = jax.lax.scan(step, init, None, length=admm.fista_iters)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# one ADMM iteration, per-shard body (k communities per shard)
+# ---------------------------------------------------------------------------
+
+def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
+                    comm_bf16: bool,
+                    a_row, z0_loc, labels_loc, mask_loc, denom,
+                    ws, zs_loc, u_loc, taus, thetas):
+    """Shapes per shard: a_row (k,M,n,n); z*_loc (k,n,C); thetas[l] (k,)."""
+    f = gcn.activation_fn(cfg.activation)
+    num_layers = cfg.num_layers
+    m_total = a_row.shape[1]
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def rowagg(a, zh):
+            return kops.community_spmm(a, zh)
+    else:
+        def rowagg(a, zh):                   # Σ_r Ã_{m,r} Z_r per lane
+            return jnp.einsum("kmip,mpc->kic", a, zh)
+
+    def gather(x_loc):
+        """(k, n, C) local -> (M, n, C) global (community-major order).
+
+        With ``comm_bf16`` the paper's p/s message payloads travel in bf16
+        (half the collective bytes; §Perf) and are restored to f32 for the
+        local subproblem math.  The bf16 value is carried through the
+        collective as uint16 — a plain convert gets hoisted back to f32 by
+        XLA's convert-mover, silently undoing the compression (§Perf log)."""
+        dt = x_loc.dtype
+        if comm_bf16 and dt == jnp.float32:
+            wire = jax.lax.bitcast_convert_type(
+                x_loc.astype(jnp.bfloat16), jnp.uint16)
+            g = jax.lax.all_gather(wire, AXIS)
+            g = jax.lax.bitcast_convert_type(g, jnp.bfloat16)
+            return g.reshape((m_total,) + x_loc.shape[1:]).astype(dt)
+        g = jax.lax.all_gather(x_loc, AXIS)  # (n_shards, k, n, C)
+        return g.reshape((m_total,) + x_loc.shape[1:])
+
+    # gathered k-th iterates — one communication round per ADMM iteration
+    zh = [gather(z) for z in zs_loc]            # Z_1..Z_L
+    zh_in = [gather(z0_loc)] + zh[:-1]          # layer inputs
+
+    # ---- Line 3: W update (layer-parallel, Jacobi over Z^k) ----
+    new_ws, new_taus = [], []
+    for l in range(num_layers):
+        agg = rowagg(a_row, zh_in[l])           # (k, n, C_{l-1})
+
+        if l < num_layers - 1:
+            def local_obj(w, agg=agg, z=zs_loc[l]):
+                r = z - f(agg @ w)
+                return 0.5 * admm.nu * jnp.vdot(r, r).real
+        else:
+            def local_obj(w, agg=agg, z=zs_loc[l]):
+                r = z - agg @ w
+                return jnp.vdot(u_loc, r).real + \
+                    0.5 * admm.rho * jnp.vdot(r, r).real
+        w_new, tau = backtracking_step_psum(local_obj, ws[l], taus[l], admm)
+        new_ws.append(w_new)
+        new_taus.append(tau)
+
+    # ---- Line 4: Z update (community-parallel, reads W^{k+1}, Z^k) ----
+    new_zs, new_thetas = [], []
+    for l in range(1, num_layers):              # hidden layers (eq. 5/6)
+        w_l, w_next = new_ws[l - 1], new_ws[l]
+        target1 = f(rowagg(a_row, zh_in[l - 1]) @ w_l)       # (k, n, C_l)
+        # relay aggregates q_{l,r} (eq. 4 second-order payload), all r
+        q_loc = rowagg(a_row, zh[l - 1]) @ w_next            # (k, n, C_next)
+        q_all = gather(q_loc)                                # (M, n, C_next)
+        z_ref = zs_loc[l - 1]
+
+        def pre_all(z, q_all=q_all, z_ref=z_ref, w_next=w_next):
+            # every community's next-layer pre-activation as fn of my lanes:
+            # pre[j, r] = q_r + Ã_{r,m_j} (z_j − z_ref_j) W   (zero for r∉N_m)
+            delta = (z - z_ref) @ w_next                     # (k, n, C)
+            return q_all[None] + jnp.einsum("kmnp,knc->kmpc", a_row, delta)
+
+        if l + 1 < num_layers:
+            zh_next = zh[l]
+
+            def obj_lanes(z, target1=target1, pre_all=pre_all,
+                          zh_next=zh_next):
+                r1 = z - target1
+                v1 = 0.5 * admm.nu * jnp.sum(r1 * r1, axis=(1, 2))
+                r2 = zh_next[None] - f(pre_all(z))           # (k, M, n, C)
+                v2 = 0.5 * admm.nu * jnp.sum(r2 * r2, axis=(1, 2, 3))
+                return v1 + v2
+        else:
+            zh_last, uh = zh[l], gather(u_loc)
+
+            def obj_lanes(z, target1=target1, pre_all=pre_all,
+                          zh_last=zh_last, uh=uh):
+                r1 = z - target1
+                v1 = 0.5 * admm.nu * jnp.sum(r1 * r1, axis=(1, 2))
+                r2 = zh_last[None] - pre_all(z)              # (k, M, n, C)
+                lin = jnp.sum(uh[None] * r2, axis=(1, 2, 3))
+                quad = 0.5 * admm.rho * jnp.sum(r2 * r2, axis=(1, 2, 3))
+                return v1 + lin + quad
+
+        z_new, theta = backtracking_step_lanes(
+            obj_lanes, zs_loc[l - 1], thetas[l - 1], admm)
+        new_zs.append(z_new)
+        new_thetas.append(theta)
+
+    # ---- Z_L: per-community FISTA prox (eq. 7) ----
+    b = rowagg(a_row, zh_in[num_layers - 1]) @ new_ws[-1]
+    z_last = fista_lanes(admm, b, u_loc, labels_loc, mask_loc,
+                         zs_loc[-1], denom)
+    new_zs.append(z_last)
+    new_thetas.append(thetas[-1])
+
+    # ---- Line 5: dual ascent (eq. 3) with updated iterates ----
+    zh_pen_new = gather(new_zs[num_layers - 2]) if num_layers >= 2 \
+        else gather(z0_loc)
+    b_new = rowagg(a_row, zh_pen_new) @ new_ws[-1]
+    new_u = u_loc + admm.rho * (new_zs[-1] - b_new)
+
+    return (tuple(new_ws), tuple(new_zs), new_u,
+            tuple(new_taus), tuple(new_thetas))
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+class ParallelADMMTrainer:
+    """The paper's 'Parallel ADMM': M community agents on a device mesh."""
+
+    def __init__(self, cfg: gcn.GCNConfig, admm: ADMMConfig, g: graph.Graph,
+                 num_parts: int, mesh: Mesh | None = None, seed: int = 0,
+                 use_kernel: bool = False, comm_bf16: bool = False):
+        self.cfg, self.admm, self.graph = cfg, admm, g
+        part = graph.partition_graph(g.num_nodes, g.edges, num_parts,
+                                     seed=seed)
+        self.layout = graph.build_community_layout(g.num_nodes, g.edges, part)
+        self.data = community_data(g, self.layout)
+        m = self.data.num_parts
+
+        if mesh is None:
+            n_dev = len(jax.devices())
+            n_shards = max(d for d in range(1, n_dev + 1) if m % d == 0)
+            mesh = make_mesh((n_shards,), (AXIS,),
+                             devices=jax.devices()[:n_shards])
+        self.mesh = mesh
+
+        # init from the same forward pass as the serial trainer
+        ws = gcn.init_weights(cfg, jax.random.key(seed))
+        a_full = graph.normalized_adjacency(g.num_nodes, g.edges)
+        zs_full = gcn.forward(cfg, jnp.asarray(a_full),
+                              jnp.asarray(g.features), ws)
+        zs = tuple(jnp.asarray(self.layout.pack(np.asarray(z)))
+                   for z in zs_full)
+        u = jnp.zeros_like(zs[-1])
+        taus = tuple(jnp.asarray(admm.tau_init) for _ in ws)
+        thetas = tuple(jnp.full((m,), admm.tau_init) for _ in zs)
+        self.state = ParallelState(tuple(ws), zs, u, taus, thetas)
+
+        sharded, rep = P(AXIS), P()
+        n_l = cfg.num_layers
+        body = partial(_iteration_body, cfg, admm, use_kernel, comm_bf16)
+        in_specs = (sharded, sharded, sharded, sharded, rep,
+                    (rep,) * n_l, (sharded,) * n_l, sharded,
+                    (rep,) * n_l, (sharded,) * n_l)
+        out_specs = ((rep,) * n_l, (sharded,) * n_l, sharded,
+                     (rep,) * n_l, (sharded,) * n_l)
+        mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+
+        @jax.jit
+        def step(state: ParallelState):
+            ws, zs, u, taus, thetas = mapped(
+                self.data.a_blocks, self.data.z0, self.data.labels,
+                self.data.train_mask, self.data.denom,
+                state.weights, state.zs, state.u, state.taus, state.thetas)
+            return ParallelState(ws, zs, u, taus, thetas)
+
+        self._step = step
+
+        a_tilde = jnp.asarray(a_full)
+        z0_full = jnp.asarray(g.features)
+        labels = jnp.asarray(g.labels)
+        tr_mask = jnp.asarray(g.train_mask, np.float32)
+        te_mask = jnp.asarray(g.test_mask, np.float32)
+        a_blocks = self.data.a_blocks
+
+        @jax.jit
+        def metrics(state: ParallelState):
+            logits = gcn.forward(cfg, a_tilde, z0_full, state.weights)[-1]
+            z_pen = state.zs[-2] if cfg.num_layers >= 2 else self.data.z0
+            agg = jnp.einsum("mrip,rpc->mic", a_blocks, z_pen)
+            res = state.zs[-1] - agg @ state.weights[-1]
+            return (gcn.accuracy(logits, labels, tr_mask),
+                    gcn.accuracy(logits, labels, te_mask),
+                    jnp.linalg.norm(res))
+
+        self._metrics = metrics
+
+    def step(self) -> None:
+        self.state = self._step(self.state)
+
+    def train(self, epochs: int, verbose: bool = False):
+        from repro.core.serial import TrainLog
+        log = TrainLog()
+        for epoch in range(epochs):
+            t0 = time.perf_counter()
+            self.step()
+            jax.block_until_ready(self.state.zs[-1])
+            dt = time.perf_counter() - t0
+            tr, te, res = self._metrics(self.state)
+            log.epoch.append(epoch)
+            log.train_acc.append(float(tr))
+            log.test_acc.append(float(te))
+            log.lagrangian.append(0.0)
+            log.residual.append(float(res))
+            log.epoch_time_s.append(dt)
+            if verbose:
+                print(f"[parallel-admm] epoch {epoch:3d} train {tr:.3f} "
+                      f"test {te:.3f} res {res:.2e} ({dt*1e3:.1f} ms)")
+        return log

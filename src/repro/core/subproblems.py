@@ -1,0 +1,253 @@
+"""ADMM subproblem solvers (paper §3 + Appendix A), global (full-graph) form.
+
+All updates are Jacobi-style exactly as in Algorithm 1: every ``W_l`` update
+reads ``Z^k`` (parallel over l), every ``Z_l`` update reads ``W^{k+1}`` and
+``Z^k`` (parallel over l and m), then the dual ``U`` ascends.
+
+The quadratic-approximation (majorize-minimize) step of eq. (2)/(8) is
+implemented with backtracking on the curvature parameter (τ for W, θ for Z):
+double τ until ``P(x_new; τ) ≥ φ(x_new)`` — the paper's condition — which is
+the standard descent-lemma test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gcn
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMConfig:
+    nu: float = 1e-3        # ν — penalty on intermediate-layer constraints
+    rho: float = 1e-3       # ρ — augmented-Lagrangian penalty, last layer
+    tau_init: float = 1.0   # initial curvature for backtracking
+    backtrack_growth: float = 2.0
+    max_backtracks: int = 30
+    fista_iters: int = 8    # inner FISTA iterations for the Z_L prox problem
+    # relative acceptance slack: P(x⁺;τ) ≥ φ(x⁺) − tol·|φ| guards against
+    # reduction-order float noise when ∇φ ≈ 0 (exact ties at initialization)
+    backtrack_rtol: float = 1e-6
+
+
+class ADMMState(NamedTuple):
+    weights: tuple[Array, ...]   # W_1..W_L
+    zs: tuple[Array, ...]        # Z_1..Z_L (auxiliary activations)
+    u: Array                     # U — dual for the Z_L constraint
+    taus: tuple[Array, ...]      # warm-started τ_l
+    thetas: tuple[Array, ...]    # warm-started θ_l
+
+
+def init_state(cfg: gcn.GCNConfig, admm: ADMMConfig, a_tilde: Array,
+               z0: Array, key: jax.Array) -> ADMMState:
+    ws = gcn.init_weights(cfg, key)
+    zs = gcn.forward(cfg, a_tilde, z0, ws)
+    u = jnp.zeros_like(zs[-1])
+    taus = tuple(jnp.asarray(admm.tau_init) for _ in ws)
+    thetas = tuple(jnp.asarray(admm.tau_init) for _ in zs)
+    return ADMMState(tuple(ws), tuple(zs), u, taus, thetas)
+
+
+# ---------------------------------------------------------------------------
+# φ objectives (paper §3 definitions)
+# ---------------------------------------------------------------------------
+
+def phi_hidden(admm: ADMMConfig, f: Callable, a_tilde: Array, w: Array,
+               z_prev: Array, z: Array) -> Array:
+    """φ(W_l, Z_{l-1}, Z_l) = ν/2 ‖Z_l − f(Ã Z_{l-1} W_l)‖²  (l < L)."""
+    r = z - f(a_tilde @ z_prev @ w)
+    return 0.5 * admm.nu * jnp.vdot(r, r).real
+
+
+def phi_last(admm: ADMMConfig, a_tilde: Array, w: Array, z_prev: Array,
+             z: Array, u: Array) -> Array:
+    """φ(W_L, Z_{L-1}, Z_L, U) = ⟨U, Z_L − ÃZ_{L-1}W_L⟩ + ρ/2‖·‖²."""
+    r = z - a_tilde @ z_prev @ w
+    return jnp.vdot(u, r).real + 0.5 * admm.rho * jnp.vdot(r, r).real
+
+
+# ---------------------------------------------------------------------------
+# Quadratic-approximation backtracking step (eq. 2 / eq. 8-10)
+# ---------------------------------------------------------------------------
+
+def backtracking_step(obj: Callable[[Array], Array], x: Array, tau0: Array,
+                      admm: ADMMConfig) -> tuple[Array, Array]:
+    """One majorize-minimize step: x⁺ = x − ∇obj(x)/τ with τ doubled until
+    P(x⁺; τ) ≥ obj(x⁺).  Returns (x⁺, accepted τ)."""
+    val, grad = jax.value_and_grad(obj)(x)
+    g_sq = jnp.vdot(grad, grad).real
+
+    def candidate(tau):
+        x_new = x - grad / tau
+        # P(x_new; τ) = val + <g, Δ> + τ/2‖Δ‖², Δ = −g/τ  ⇒ val − ‖g‖²/(2τ)
+        p_val = val - 0.5 * g_sq / tau
+        return x_new, p_val
+
+    def cond(carry):
+        tau, it = carry
+        x_new, p_val = candidate(tau)
+        tol = admm.backtrack_rtol * (jnp.abs(p_val) + 1e-12)
+        return (p_val + tol < obj(x_new)) & (it < admm.max_backtracks)
+
+    def body(carry):
+        tau, it = carry
+        return tau * admm.backtrack_growth, it + 1
+
+    # warm start slightly optimistically (shrink), then grow to acceptance
+    tau0 = jnp.maximum(tau0 / admm.backtrack_growth, 1e-8)
+    tau, _ = jax.lax.while_loop(cond, body, (tau0, jnp.asarray(0)))
+    x_new, _ = candidate(tau)
+    return x_new, tau
+
+
+# ---------------------------------------------------------------------------
+# ψ objectives for Z updates (Appendix A, global form)
+# ---------------------------------------------------------------------------
+
+def make_psi(cfg: gcn.GCNConfig, admm: ADMMConfig, a_tilde: Array, z0: Array,
+             weights: Sequence[Array], zs: Sequence[Array], u: Array,
+             l: int) -> Callable[[Array], Array]:
+    """Objective for Z_l (1-indexed layer l = idx+1), l < L.  Eq. (5)/(6)."""
+    f = gcn.activation_fn(cfg.activation)
+    num_layers = cfg.num_layers
+    z_below = z0 if l == 1 else zs[l - 2]
+    w_l, w_next = weights[l - 1], weights[l]
+
+    def psi(z):
+        # self-reconstruction term (this layer's constraint)
+        r1 = z - f(a_tilde @ z_below @ w_l)
+        val = 0.5 * admm.nu * jnp.vdot(r1, r1).real
+        if l + 1 < num_layers:            # eq. (5): next layer is hidden
+            r2 = zs[l] - f(a_tilde @ z @ w_next)
+            val += 0.5 * admm.nu * jnp.vdot(r2, r2).real
+        else:                             # eq. (6): next layer is the last
+            r2 = zs[num_layers - 1] - a_tilde @ z @ w_next
+            val += jnp.vdot(u, r2).real + 0.5 * admm.rho * jnp.vdot(r2, r2).real
+        return val
+
+    return psi
+
+
+def fista_last_z(admm: ADMMConfig, b: Array, u: Array, labels: Array,
+                 mask: Array, z_init: Array,
+                 denom: Array | None = None) -> Array:
+    """Solve eq. (7): argmin_Z R(Z,Y) + ⟨U, Z−B⟩ + ρ/2‖Z−B‖² with FISTA [1].
+
+    The objective is smooth, so FISTA reduces to Nesterov-accelerated
+    gradient with per-iteration Lipschitz backtracking.  ``denom`` overrides
+    the CE normalizer (the parallel trainer passes the *global* labeled count
+    so per-community subproblems sum to the global objective).
+    """
+
+    def obj(z):
+        r = z - b
+        if denom is None:
+            ce = gcn.masked_cross_entropy(z, labels, mask)
+        else:
+            logp = jax.nn.log_softmax(z, axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+            ce = jnp.sum(nll * mask) / denom
+        return (ce + jnp.vdot(u, r).real
+                + 0.5 * admm.rho * jnp.vdot(r, r).real)
+
+    grad_fn = jax.grad(obj)
+
+    def step(carry, _):
+        z, y, t, lip = carry
+        val_y = obj(y)
+        g = grad_fn(y)
+        g_sq = jnp.vdot(g, g).real
+
+        def bt_cond(state):
+            lip, it = state
+            z_new = y - g / lip
+            # descent lemma test: obj(z_new) ≤ obj(y) − ‖g‖²/(2L) (+ rtol)
+            bound = val_y - 0.5 * g_sq / lip
+            tol = admm.backtrack_rtol * (jnp.abs(bound) + 1e-12)
+            return (obj(z_new) > bound + tol) & (it < admm.max_backtracks)
+
+        def bt_body(state):
+            lip, it = state
+            return lip * admm.backtrack_growth, it + 1
+
+        lip, _ = jax.lax.while_loop(bt_cond, bt_body, (lip, jnp.asarray(0)))
+        z_new = y - g / lip
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_new = z_new + ((t - 1.0) / t_new) * (z_new - z)
+        return (z_new, y_new, t_new, lip * 0.9), None
+
+    init = (z_init, z_init, jnp.asarray(1.0), jnp.asarray(admm.rho + 1.0))
+    (z, _, _, _), _ = jax.lax.scan(step, init, None, length=admm.fista_iters)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# One full ADMM iteration (Algorithm 1), global form
+# ---------------------------------------------------------------------------
+
+def admm_iteration(cfg: gcn.GCNConfig, admm: ADMMConfig, a_tilde: Array,
+                   z0: Array, labels: Array, mask: Array,
+                   state: ADMMState) -> ADMMState:
+    f = gcn.activation_fn(cfg.activation)
+    num_layers = cfg.num_layers
+    ws, zs, u, taus, thetas = state
+
+    # ---- Line 3: update W_l for all l in parallel (Jacobi, reads Z^k) ----
+    new_ws, new_taus = [], []
+    for l in range(num_layers):
+        z_prev = z0 if l == 0 else zs[l - 1]
+        if l < num_layers - 1:
+            obj = lambda w, zp=z_prev, z=zs[l]: phi_hidden(
+                admm, f, a_tilde, w, zp, z)
+        else:
+            obj = lambda w, zp=z_prev, z=zs[l]: phi_last(
+                admm, a_tilde, w, zp, z, u)
+        w_new, tau = backtracking_step(obj, ws[l], taus[l], admm)
+        new_ws.append(w_new)
+        new_taus.append(tau)
+    new_ws = tuple(new_ws)
+
+    # ---- Line 4: update Z_{l} for all l in parallel (reads W^{k+1}, Z^k) --
+    new_zs, new_thetas = [], []
+    for l in range(1, num_layers):          # hidden layers: eq. (8)-(10)
+        psi = make_psi(cfg, admm, a_tilde, z0, new_ws, zs, u, l)
+        z_new, theta = backtracking_step(psi, zs[l - 1], thetas[l - 1], admm)
+        new_zs.append(z_new)
+        new_thetas.append(theta)
+    # last layer: FISTA prox (eq. 7)
+    z_pen = zs[num_layers - 2] if num_layers >= 2 else z0
+    b = a_tilde @ z_pen @ new_ws[-1]
+    z_last = fista_last_z(admm, b, u, labels, mask, zs[-1])
+    new_zs.append(z_last)
+    new_thetas.append(thetas[-1])
+    new_zs = tuple(new_zs)
+
+    # ---- Line 5: dual ascent (eq. 3) ----
+    z_pen_new = new_zs[num_layers - 2] if num_layers >= 2 else z0
+    residual = new_zs[-1] - a_tilde @ z_pen_new @ new_ws[-1]
+    new_u = u + admm.rho * residual
+
+    return ADMMState(new_ws, new_zs, new_u, tuple(new_taus), tuple(new_thetas))
+
+
+def lagrangian_value(cfg: gcn.GCNConfig, admm: ADMMConfig, a_tilde: Array,
+                     z0: Array, labels: Array, mask: Array,
+                     state: ADMMState) -> Array:
+    """ℒ_ρ(W, Z, U) — eq. (1), for convergence monitoring."""
+    f = gcn.activation_fn(cfg.activation)
+    ws, zs, u = state.weights, state.zs, state.u
+    val = gcn.masked_cross_entropy(zs[-1], labels, mask)
+    z_prev = z0
+    for l in range(cfg.num_layers - 1):
+        r = zs[l] - f(a_tilde @ z_prev @ ws[l])
+        val += 0.5 * admm.nu * jnp.vdot(r, r).real
+        z_prev = zs[l]
+    r = zs[-1] - a_tilde @ z_prev @ ws[-1]
+    val += jnp.vdot(u, r).real + 0.5 * admm.rho * jnp.vdot(r, r).real
+    return val

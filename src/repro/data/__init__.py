@@ -1,0 +1,2 @@
+from repro.data.pipeline import TokenPipeline  # noqa: F401
+from repro.data.synthetic import synthetic_token_batches  # noqa: F401

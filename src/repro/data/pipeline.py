@@ -1,0 +1,51 @@
+"""Sharded host→device data pipeline.
+
+Double-buffered iterator that places each global batch according to the
+mesh's data axes (jax.device_put with a NamedSharding), prefetching the
+next host batch while the current step runs — the standard input-pipeline
+shape for a pjit training loop.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class TokenPipeline:
+    def __init__(self, source: Iterator[dict], mesh: Optional[Mesh] = None,
+                 batch_axes: tuple[str, ...] = ("data",),
+                 prefetch: int = 2):
+        self.source = source
+        self.mesh = mesh
+        self.batch_axes = tuple(a for a in batch_axes
+                                if mesh is not None
+                                and a in mesh.axis_names)
+        self.prefetch = prefetch
+        self._buf: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+
+    def _place(self, batch: dict) -> dict:
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        spec = P(self.batch_axes if self.batch_axes else None)
+
+        def put(v):
+            sh = NamedSharding(self.mesh,
+                               P(*((spec[0],) + (None,) * (v.ndim - 1))))
+            return jax.device_put(v, sh)
+
+        return {k: put(v) for k, v in batch.items()}
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        with self._lock:
+            while len(self._buf) < self.prefetch:
+                self._buf.append(self._place(next(self.source)))
+            return self._buf.popleft()

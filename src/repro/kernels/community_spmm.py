@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: community-blocked sparse-dense matmul (Ã · Z).
+
+The GCN ADMM hot spot is the aggregation ``Σ_r Ã_{m,r} Z_r``.  On TPU we do
+NOT port a CSR gather-SpMM (no efficient per-element gather on the VPU);
+instead the paper's community structure gives a *block*-sparse layout:
+dense (n_pad × n_pad) community blocks with a (M × M) block mask — each
+present block is a dense MXU matmul on 128-aligned VMEM tiles and absent
+blocks are skipped with ``@pl.when`` (DESIGN.md §2, hardware adaptation).
+
+Grid: (row-tiles, col-tiles, M) — the community (reduction) axis is
+innermost so the output tile stays resident in VMEM across the reduction.
+
+  a_row:  (M, n_pad, n_pad)   this shard's row of Ã blocks
+  z_all:  (M, n_pad, C)       gathered community features
+  mask:   (M,)                neighbour mask (True = nonzero block)
+  out:    (n_pad, C)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 256     # rows per tile (8-aligned; 256 divides n_pad)
+DEFAULT_TILE_C = 256     # feature cols per tile (128-aligned)
+
+
+def _spmm_kernel(mask_ref, a_ref, z_ref, o_ref, acc_scr):
+    r = pl.program_id(2)
+    n_r = pl.num_programs(2)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(mask_ref[r] != 0)
+    def _accum():
+        a = a_ref[...]                       # (tile_n, n_pad)
+        z = z_ref[...]                       # (n_pad, tile_c)
+        acc_scr[...] += jnp.dot(a, z, preferred_element_type=jnp.float32)
+
+    @pl.when(r == n_r - 1)
+    def _write():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_c", "interpret"))
+def community_spmm(a_row: jax.Array, z_all: jax.Array, mask: jax.Array,
+                   *, tile_n: int = DEFAULT_TILE_N,
+                   tile_c: int = DEFAULT_TILE_C,
+                   interpret: bool = False) -> jax.Array:
+    m, n_pad, _ = a_row.shape
+    c = z_all.shape[-1]
+    tile_n = min(tile_n, n_pad)
+    tile_c = min(tile_c, c)
+    # shrink tiles to divide evenly (n_pad is 8-aligned by construction)
+    while n_pad % tile_n:
+        tile_n //= 2
+    while c % tile_c:
+        tile_c //= 2
+
+    grid = (n_pad // tile_n, c // tile_c, m)
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda i, j, r: (0,)),   # block mask (SMEM)
+            pl.BlockSpec((None, tile_n, n_pad), lambda i, j, r: (r, i, 0)),
+            pl.BlockSpec((None, n_pad, tile_c), lambda i, j, r: (r, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_c), lambda i, j, r: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, c), z_all.dtype),
+        scratch_shapes=[_vmem_scratch((tile_n, tile_c))],
+        interpret=interpret,
+    )(mask.astype(jnp.int32), a_row, z_all)
+
+
+def _vmem_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: flash attention (online softmax), causal + sliding
+window + GQA.
+
+Same blocking as ``models.attention.block_causal_attention`` (its jnp path
+is the oracle): grid (batch·kv_head, q-blocks, kv-blocks), kv innermost so
+the (block_q × head_dim) accumulator and the running (m, l) statistics stay
+in VMEM scratch across the kv reduction.  Fully-masked kv blocks (beyond
+the causal frontier or outside the sliding window) are skipped via
+``@pl.when`` — the kernel does causal FLOPs only.
+
+Layout per program: q (block_q, hd), k/v (block_k, hd) for one (batch,
+kv-head, q-group) slice; GQA handled by folding the q-head group into the
+q rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window, seq_len: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    # causal / window block-level skip: any overlap between
+    # [q_start, q_end) × [k_start, k_end)?
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(
+            run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (block_q, hd)
+        k = k_ref[0].astype(jnp.float32)            # (block_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                          # (block_q, 1)
+        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd) -> (B, S, Hq, hd)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    while s % block_q:
+        block_q //= 2
+    while s % block_k:
+        block_k //= 2
+
+    # (B, S, Hq, hd) -> (B·Hkv, group, S, hd) -> fold group into rows
+    qr = q.reshape(b, s, hkv, group, hd).transpose(0, 2, 3, 1, 4) \
+          .reshape(b * hkv * group, s, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+
+    grid = (b * hkv * group, s // block_q, s // block_k)
+    kern = functools.partial(
+        _flash_kernel, scale=1.0 / (hd ** 0.5), block_q=block_q,
+        block_k=block_k, causal=causal, window=window, seq_len=s)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv * group, s, hd), q.dtype),
+        scratch_shapes=[
+            # VMEM scratch: running max, denominator, output accumulator
+            _vmem_scratch((block_q, 1)),
+            _vmem_scratch((block_q, 1)),
+            _vmem_scratch((block_q, hd)),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hkv, group, s, hd).transpose(0, 3, 1, 2, 4) \
+              .reshape(b, s, hq, hd)
+
+
+def _vmem_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

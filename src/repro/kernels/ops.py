@@ -1,0 +1,67 @@
+"""Jit'd kernel wrappers with backend dispatch.
+
+On TPU the Pallas kernels run natively; on CPU (this container) the pure
+jnp oracle executes instead, and tests force ``interpret=True`` Pallas to
+validate the kernel bodies themselves against the oracles.
+
+Set ``repro_force_interpret(True)`` (or env REPRO_PALLAS_INTERPRET=1) to
+route the real kernels through interpret mode everywhere.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.community_spmm import community_spmm as _spmm_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+_FORCE_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def repro_force_interpret(value: bool) -> None:
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = value
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def community_spmm(a_row: jax.Array, z_all: jax.Array,
+                   mask: jax.Array | None = None) -> jax.Array:
+    """Σ_r Ã_{m,r} Z_r with block-sparse skipping.
+
+    a_row may carry a leading lane dim (k communities per shard)."""
+    if mask is None:
+        mask = jnp.ones((a_row.shape[-3],), jnp.int32)
+    if a_row.ndim == 4:      # lanes: vmap the kernel
+        fn = jax.vmap(lambda a: community_spmm(a, z_all, mask))
+        return fn(a_row)
+    if _on_tpu():
+        return _spmm_kernel(a_row, z_all, mask)
+    if _FORCE_INTERPRET:
+        return _spmm_kernel(a_row, z_all, mask, interpret=True)
+    return ref.community_spmm_ref(a_row, z_all, mask)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None) -> jax.Array:
+    if _on_tpu():
+        return _flash_kernel(q, k, v, causal=causal, window=window)
+    if _FORCE_INTERPRET:
+        return _flash_kernel(q, k, v, causal=causal, window=window,
+                             interpret=True)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 256):
+    if _on_tpu():
+        return _ssd_kernel(x, dt, a, b_mat, c_mat, chunk=chunk)
+    if _FORCE_INTERPRET:
+        return _ssd_kernel(x, dt, a, b_mat, c_mat, chunk=chunk,
+                           interpret=True)
+    return ref.ssd_scan_ref(x, dt, a, b_mat, c_mat, chunk=chunk), None

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def community_spmm_ref(a_row: jax.Array, z_all: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """Σ_r mask_r · Ã_{m,r} Z_r — dense einsum oracle."""
+    masked = a_row * mask[:, None, None].astype(a_row.dtype)
+    return jnp.einsum("rip,rpc->ic", masked, z_all)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """Exact softmax attention with GQA + causal/window masks (f32)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, s, hkv, group, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    scores /= jnp.sqrt(hd)
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, -2.0 ** 30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat, *, chunk: int = 256):
+    """Chunked SSD oracle (validated against the naive recurrence)."""
+    from repro.models.ssm import ssd_chunked
+    y, _ = ssd_chunked(x, dt, a, b_mat, c_mat, min(chunk, x.shape[1]))
+    return y

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan.
+
+One program per (batch·head, chunk); the chunk axis is innermost so the
+(P × N) SSM state lives in VMEM scratch and is carried across the chunk
+reduction (same persistent-scratch pattern as flash attention).  Within a
+chunk everything is dense MXU work — the "dual" quadratic form of the SSD
+paper: intra-chunk scores (C Bᵀ ⊙ decay), inter-chunk state injection, and
+the state update, all (chunk × N/P) matmuls.
+
+Oracle: ``repro.models.ssm.ssd_chunked`` (pure jnp, validated against the
+naive recurrence in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (chunk, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (chunk, 1)
+    a = a_ref[0, 0].astype(jnp.float32)       # scalar decay rate (< 0)
+    b = b_ref[0].astype(jnp.float32)          # (chunk, N)
+    c = c_ref[0].astype(jnp.float32)          # (chunk, N)
+
+    da = dt * a                               # (chunk, 1) log-decay
+    cum = jnp.cumsum(da, axis=0)              # inclusive within-chunk
+
+    # intra-chunk dual form: scores[t,u] = (c_t·b_u)·exp(cum_t−cum_u)·dt_u
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = li >= lj
+    decay = jnp.exp(cum - cum.T)              # (chunk, chunk) via broadcast
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = jnp.where(causal, scores * decay * dt.T, 0.0)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += (c ⊙ exp(cum)) @ state   (state: (N, P))
+    y += jax.lax.dot_general(c * jnp.exp(cum), state_scr[...],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # state update: state = exp(cum_L)·state + (b ⊙ w)ᵀ @ x,
+    # w_u = exp(cum_L − cum_u)·dt_u
+    cum_last = cum[chunk - 1:chunk, :]        # (1, 1)
+    w = jnp.exp(cum_last - cum) * dt          # (chunk, 1)
+    state_scr[...] = jnp.exp(cum_last[0, 0]) * state_scr[...] + \
+        jax.lax.dot_general(b * w, x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b_mat: jax.Array,
+             c_mat: jax.Array, *, chunk: int = 256,
+             interpret: bool = False) -> tuple[jax.Array, None]:
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,G,N) -> (y, None)."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    xr = x.transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+    dtr = dt.transpose(0, 2, 1).reshape(bsz * h, s, 1)
+    ar = jnp.broadcast_to(a[None, :], (bsz, h)).reshape(bsz * h, 1)
+    br = b_mat.transpose(0, 2, 1, 3).reshape(bsz * g, s, n)
+    cr = c_mat.transpose(0, 2, 1, 3).reshape(bsz * g, s, n)
+
+    def bc_index(bh, ci, rep=rep, h=h, g=g):
+        return (bh // h * g + (bh % h) // rep, ci, 0)
+
+    grid = (bsz * h, nc)
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, chunk, n), bc_index),
+            pl.BlockSpec((1, chunk, n), bc_index),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz * h, s, p), x.dtype),
+        scratch_shapes=[_vmem_scratch((n, p))],
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+    return y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3), None
+
+
+def _vmem_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init), which is why the docstring sits below them.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × input-shape) on the
+production meshes — 16×16 (single pod, 256 chips) and 2×16×16 (512 chips).
+
+No real allocation: params/optimizer/caches/batches are ShapeDtypeStructs.
+Per combination this records memory_analysis, cost_analysis and the
+collective-op byte census parsed from the optimized HLO, feeding
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.configs.shapes import InputShape
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline
+from repro.models.build import make_model
+from repro.sharding import partition
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# long_500k: dense/MoE/VLM/audio archs run their sliding-window variant
+LONG_CONTEXT_WINDOW = 4096
+SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def adapt_config(arch: str, shape: InputShape):
+    cfg = get_config(arch)
+    notes = []
+    if shape.name == "long_500k" and cfg.arch_type not in SUBQUADRATIC:
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+        notes.append(f"sliding_window={LONG_CONTEXT_WINDOW} (long_500k "
+                     "sub-quadratic variant, DESIGN.md)")
+    return cfg, notes
+
+
+def abstract_tree(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowered(arch: str, shape_name: str, mesh, optimized: bool = False):
+    shape = INPUT_SHAPES[shape_name]
+    cfg, notes = adapt_config(arch, shape)
+    model = make_model(cfg)
+    rolling = shape.name == "long_500k" and cfg.arch_type not in SUBQUADRATIC
+    if optimized:
+        notes.append("optimized: sharding hints + deferred grad reduction "
+                     "(EXPERIMENTS.md §Perf)")
+
+    params_s = jax.eval_shape(model.init, jax.random.key(0))
+    pspecs = partition.param_specs(cfg, mesh, params_s)
+    batch_s = model.input_specs(shape)
+    bspecs = partition.batch_specs(cfg, mesh, batch_s)
+
+    dp = mesh_lib.data_axes(mesh)
+
+    def logits_pspec():
+        bsp = dp if shape.global_batch % _dp_size(mesh) == 0 else None
+        vsp = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+        return P(bsp, None, vsp)
+
+    if shape.step == "train":
+        opt = model.init_optimizer()
+        opt_s = jax.eval_shape(opt.init, params_s)
+        ospecs = partition.opt_state_specs(cfg, mesh, params_s, opt_s)
+        metric_names = ("ce", "aux", "loss") + (
+            ("mtp_ce",) if cfg.mtp_depth else ())
+        out_specs = (pspecs, ospecs, {k: P() for k in metric_names})
+        if optimized:
+            import functools
+            step = functools.partial(model.train_step_deferred, mesh)
+        else:
+            step = model.train_step
+        fn = jax.jit(step,
+                     in_shardings=(shardings(mesh, pspecs),
+                                   shardings(mesh, ospecs),
+                                   shardings(mesh, bspecs)),
+                     out_shardings=shardings(mesh, out_specs))
+        lowered = fn.lower(params_s, opt_s, batch_s)
+    elif shape.step == "prefill":
+        def prefill_fn(params, batch):
+            logits, _, _ = model.forward(params, batch, last_only=True)
+            return logits
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(shardings(mesh, pspecs),
+                                   shardings(mesh, bspecs)),
+                     out_shardings=NamedSharding(mesh, logits_pspec()))
+        lowered = fn.lower(params_s, batch_s)
+    else:   # decode
+        cache_s = model.cache_specs(shape, rolling=rolling)
+        cspecs = partition.cache_specs(cfg, mesh, cache_s)
+        tok_spec = jax.tree.map(lambda _: P(), batch_s)
+
+        def decode_fn(params, caches, batch):
+            return model.decode_step(params, caches, batch["tokens"],
+                                     rolling=rolling)
+        fn = jax.jit(decode_fn,
+                     in_shardings=(shardings(mesh, pspecs),
+                                   shardings(mesh, cspecs),
+                                   shardings(mesh, tok_spec)),
+                     out_shardings=(NamedSharding(mesh, logits_pspec()),
+                                    shardings(mesh, cspecs)))
+        lowered = fn.lower(params_s, cache_s, batch_s)
+    return cfg, lowered, notes
+
+
+def _dp_size(mesh) -> int:
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in mesh_lib.data_axes(mesh)]))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: Path = RESULTS_DIR, optimized: bool = False) -> dict:
+    from repro.sharding.hints import sharding_hints
+    import contextlib
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    hint_ctx = sharding_hints(mesh, moe_a2a=True) if optimized \
+        else contextlib.nullcontext()
+    with mesh, hint_ctx:
+        cfg, lowered, notes = build_lowered(arch, shape_name, mesh,
+                                            optimized=optimized)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    census = roofline.hlo_census(hlo)
+    coll = {op: census.collectives[op] for op in roofline.COLLECTIVE_OPS}
+    coll["total_bytes"] = census.collective_bytes
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": n_chips,
+        "step": INPUT_SHAPES[shape_name].step,
+        "notes": notes,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals")
+                 if isinstance(cost, dict)},
+        # trip-count-aware HLO census (per-device module) — the roofline
+        # source of truth; raw cost_analysis kept above for comparison
+        "census": {
+            "flops": census.flops,
+            "hbm_bytes": census.hbm_bytes,
+            "collective_bytes": census.collective_bytes,
+            "while_trips": sorted(set(int(t) for t in census.while_trips)),
+        },
+        "analytic_hbm_bytes": roofline.analytic_hbm_bytes(
+            cfg, INPUT_SHAPES[shape_name], INPUT_SHAPES[shape_name].step,
+            n_chips),
+        "model_flops": roofline.model_flops(
+            cfg, INPUT_SHAPES[shape_name], INPUT_SHAPES[shape_name].step),
+        "collectives": coll,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = "__opt" if optimized else ""
+    out = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    out.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="optimized variant (sharding hints + deferred "
+                         "grad reduction) -> *__opt.json")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch} × {shape} × " + \
+                ("2x16x16" if args.multi_pod else "16x16") + \
+                (" [opt]" if args.opt else "")
+            try:
+                r = run_one(arch, shape, args.multi_pod, Path(args.out),
+                            optimized=args.opt)
+                peak = r["memory"]["peak_bytes"]
+                peak_s = f"{peak/2**30:.2f} GiB/chip" if peak else "n/a"
+                print(f"[dryrun] OK   {tag}: compile {r['compile_s']}s, "
+                      f"peak {peak_s}, flops {r['cost'].get('flops')}")
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[dryrun] FAIL {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: "
+                         + "; ".join(t for t, _ in failures))
+    print("[dryrun] all combinations lowered and compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,395 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+``compiled.cost_analysis()`` counts every HLO op ONCE — loop bodies
+(lax.scan over layers, grad-accumulation microbatches) are not multiplied
+by their trip counts, so its FLOPs understate a scanned stack by ~L×.
+This module instead walks the optimized HLO text with a **trip-count-aware
+census**:
+
+  * computations are parsed into instruction lists;
+  * ``while`` ops multiply their body's costs by the trip count recovered
+    from the loop condition (canonical `i < C` compare against a constant);
+  * ``fusion`` / ``call`` / ``conditional`` recurse with multiplier 1;
+  * FLOPs: 2·prod(result_dims)·K for every dot (K = contracted lhs dims),
+    plus convolution terms;
+  * collective bytes: operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (trip-weighted);
+  * HBM byte proxy: operand+result sizes at fusion granularity (fusion
+    internals live in registers/VMEM), trip-weighted.
+
+Roofline terms per (arch × shape × mesh), in seconds (per-chip, the HLO is
+the per-device partitioned module):
+
+  compute    = flops            / 197 TFLOP/s
+  memory     = hbm_bytes        / 819 GB/s
+  collective = collective_bytes / 50 GB/s/link
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "u4": 1, "s4": 1,
+}
+
+# skip these when accumulating the HBM-traffic proxy
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "iota", "broadcast", "while", "conditional", "call",
+               "custom-call", "copy-start", "copy-done"}
+
+# ops that touch only a slice of their big operand (in-place / sparse):
+# counting the full operand would blow up trip-weighted loops (a DUS into a
+# stacked (L, ...) buffer reads the slice, not the whole buffer)
+_SLICE_TRAFFIC = {"dynamic-update-slice", "dynamic-slice", "gather",
+                  "scatter", "slice", "pad", "concatenate"}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_bytes: int
+    result_dims: tuple[int, ...]
+    dtype: str
+    operands: list[str]
+    attrs: str
+    tuple_bytes: int = 0       # for tuple-typed results
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+
+
+# computation definitions start at column 0: "%name (args...) -> type {"
+# (args may contain nested parens — match only the name and trailing '{')
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_SHAPED = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_OPNAME = re.compile(r"([a-z][\w\-]*)\(")
+
+
+def _parse_shape_bytes(type_str: str) -> tuple[int, tuple[int, ...], str]:
+    m = _SHAPED.match(type_str.strip())
+    if not m:
+        return 0, (), ""
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0, (), ""
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    n = 1
+    for d in shape:
+        n *= d
+    return n * _DTYPE_BYTES[dtype], shape, dtype
+
+
+def _operand_names(body: str, opname: str) -> list[str]:
+    """Operand instruction names from 'op(...)' (first balanced parens)."""
+    idx = body.find(opname + "(")
+    if idx < 0:
+        return []
+    tail = body[idx + len(opname) + 1:]
+    depth, args = 1, ""
+    for ch in tail:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        args += ch
+    names = []
+    for a in args.split(","):
+        a = a.strip()
+        m = re.match(r"%([\w.\-]+)", a)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            if line and not line[0].isspace():
+                m = _COMP_START.match(line)
+                if m:
+                    current = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, body = m.groups()
+        # result type: up to the op name
+        if body.startswith("("):
+            # tuple type: find matching ')' then op
+            depth, i = 0, 0
+            for i, ch in enumerate(body):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            tuple_type, rest = body[:i + 1], body[i + 1:]
+            tbytes = sum(_parse_shape_bytes(f"{d}[{s}]")[0]
+                         for d, s in _SHAPED.findall(tuple_type))
+            rbytes, rdims, dtype = 0, (), ""
+        else:
+            parts = body.split(None, 1)
+            rbytes, rdims, dtype = _parse_shape_bytes(parts[0])
+            rest = parts[1] if len(parts) > 1 else ""
+            tbytes = 0
+        om = _OPNAME.search(rest)
+        op = om.group(1) if om else ""
+        operands = _operand_names(rest, op) if op else []
+        current.instrs.append(Instr(name, op, rbytes, rdims, dtype,
+                                    operands, rest, tbytes))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Canonical scan condition: compare(i, C) direction=LT with C constant
+    (possibly via a wrapped fusion). Fallback: any s32 scalar constant."""
+    consts: dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.op == "constant" and ins.dtype in ("s32", "u32", "s64"):
+            m = re.search(r"constant\((\d+)\)", ins.attrs)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if "direction=LT" in ins.attrs or ins.op == "compare" \
+                or "compare" in ins.attrs:
+            for o in ins.operands:
+                if o in consts:
+                    return consts[o]
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+
+
+def _dot_flops(ins: Instr, sizes: dict[str, tuple[int, ...]]) -> float:
+    """2 · prod(result) · K, K = product of lhs contracting dims."""
+    res = 1
+    for d in ins.result_dims:
+        res *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    k = 1
+    if m and ins.operands:
+        lhs_shape = sizes.get(ins.operands[0], ())
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_shape):
+                k *= lhs_shape[int(idx)]
+    return 2.0 * res * k
+
+
+@dataclasses.dataclass
+class Census:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {op: {"count": 0, "bytes": 0.0}
+                                 for op in COLLECTIVE_OPS})
+    while_trips: list = dataclasses.field(default_factory=list)
+
+    def scaled_add(self, other: "Census", mult: float):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for op in COLLECTIVE_OPS:
+            self.collectives[op]["count"] += other.collectives[op]["count"] * mult
+            self.collectives[op]["bytes"] += other.collectives[op]["bytes"] * mult
+        self.while_trips.extend(other.while_trips)
+
+
+def hlo_census(text: str) -> Census:
+    comps = parse_hlo(text)
+    # result shapes per instruction name (for dot K lookup), global
+    shapes: dict[str, tuple[int, ...]] = {}
+    bytes_of: dict[str, int] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.result_dims
+            bytes_of[ins.name] = ins.result_bytes or ins.tuple_bytes
+
+    memo: dict[str, Census] = {}
+
+    def walk(name: str) -> Census:
+        if name in memo:
+            return memo[name]
+        memo[name] = Census()          # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        c = Census()
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                c.flops += _dot_flops(ins, shapes)
+            elif ins.op == "convolution":
+                # 2 · result_size · (kernel elements / out_channels)
+                res = 1
+                for d in ins.result_dims:
+                    res *= d
+                kern = 1
+                if len(ins.operands) > 1:
+                    for d in shapes.get(ins.operands[1], ()):
+                        kern *= d
+                out_ch = ins.result_dims[-1] if ins.result_dims else 1
+                c.flops += 2.0 * res * max(kern, 1) / max(out_ch, 1)
+            base_op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base_op in COLLECTIVE_OPS:
+                nbytes = sum(bytes_of.get(o, 0) for o in ins.operands)
+                c.collective_bytes += nbytes
+                c.collectives[base_op]["count"] += 1
+                c.collectives[base_op]["bytes"] += nbytes
+            # HBM traffic proxy at fusion granularity
+            if ins.op and ins.op not in _NO_TRAFFIC:
+                out_b = ins.result_bytes or ins.tuple_bytes
+                if ins.op in _SLICE_TRAFFIC:
+                    if ins.op == "dynamic-update-slice" and \
+                            len(ins.operands) > 1:
+                        upd = bytes_of.get(ins.operands[1], 0)
+                        c.hbm_bytes += 2 * upd
+                    else:
+                        c.hbm_bytes += 2 * out_b
+                else:
+                    in_b = sum(bytes_of.get(o, 0) for o in ins.operands)
+                    c.hbm_bytes += out_b + in_b
+            # recurse
+            if ins.op == "while":
+                bm, cm = _BODY.search(ins.attrs), _COND.search(ins.attrs)
+                trip = _trip_count(comps[cm.group(1)]) if cm and \
+                    cm.group(1) in comps else 1
+                c.while_trips.append(trip)
+                if bm and bm.group(1) in comps:
+                    c.scaled_add(walk(bm.group(1)), trip)
+            else:
+                cm = _CALLS.search(ins.attrs)
+                if cm and cm.group(1) in comps:
+                    sub = walk(cm.group(1))
+                    # fusion internals are not HBM traffic; flops/colls are
+                    sub2 = Census(flops=sub.flops,
+                                  collective_bytes=sub.collective_bytes,
+                                  collectives=sub.collectives,
+                                  while_trips=sub.while_trips)
+                    c.scaled_add(sub2, 1.0)
+        memo[name] = c
+        return c
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda k: len(comps[k].instrs))
+    return walk(entry)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Trip-count-aware collective census (kept as the dryrun JSON field)."""
+    c = hlo_census(hlo_text)
+    out = {op: {"count": c.collectives[op]["count"],
+                "bytes": c.collectives[op]["bytes"]}
+           for op in COLLECTIVE_OPS}
+    out["total_bytes"] = c.collective_bytes
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_total: float
+                   ) -> dict[str, Any]:
+    """Per-chip terms in seconds (inputs are per-device census numbers)."""
+    terms = {"compute_s": flops / PEAK_FLOPS,
+             "memory_s": hbm_bytes / HBM_BW,
+             "collective_s": collective_total / ICI_BW}
+    terms["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                            key=lambda k: terms[k])
+    return terms
+
+
+def analytic_hbm_bytes(cfg, shape, step: str, chips: int,
+                       model_shards: int = 16) -> float:
+    """Algorithmic minimum HBM traffic per chip per step (roofline floor).
+
+    The census HBM proxy is an *upper* bound — CPU fusion granularity is
+    finer than TPU's, so logical buffers are counted at more boundaries.
+    This floor counts: param reads (+grad/optimizer traffic for train),
+    residual-stream activations at layer granularity, logits/CE passes and
+    decode-cache reads.  §Roofline reports both bounds.
+    """
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    p_bytes = cfg.param_count() * dt / chips
+    d = cfg.d_model
+    if step == "decode":
+        tokens = shape.global_batch            # one per stream
+        # cache read is the dominant decode traffic
+        if cfg.arch_type == "ssm":
+            s_cfg = cfg.ssm
+            d_in = s_cfg.expand * d
+            cache = (shape.global_batch * cfg.num_layers *
+                     (d_in // s_cfg.head_dim) * s_cfg.head_dim *
+                     s_cfg.d_state * dt)
+        elif cfg.hybrid is not None:
+            w = cfg.hybrid.lru_width or d
+            n_attn = cfg.num_layers // len(cfg.hybrid.pattern)
+            cache = shape.global_batch * (
+                cfg.num_layers * w * 4 +        # recurrent states (f32)
+                n_attn * min(shape.seq_len, cfg.hybrid.local_window) *
+                cfg.num_kv_heads * cfg.resolved_head_dim * 2 * dt)
+        elif cfg.mla is not None:
+            eff = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+            cache = (shape.global_batch * cfg.num_layers * eff *
+                     (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * dt)
+        else:
+            eff = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+            layers = cfg.num_decoder_layers if cfg.is_encoder_decoder \
+                else cfg.num_layers
+            cache = (shape.global_batch * layers * eff *
+                     cfg.num_kv_heads * cfg.resolved_head_dim * 2 * dt)
+        # active params read once (MoE reads only routed experts)
+        act_p = cfg.active_param_count() * dt / chips
+        return act_p + cache / chips + tokens * d * dt * 10
+    tokens_per_chip = shape.global_batch * shape.seq_len / chips * 16  # model-dim sharding keeps activations on all model shards
+    layers = cfg.num_layers + (cfg.num_decoder_layers or 0)
+    act = tokens_per_chip * d * dt * layers * (30 if step == "train" else 10)
+    logits = (shape.global_batch * shape.seq_len * cfg.vocab_size * 4 /
+              chips * (4 if step == "train" else 0.01))
+    if step == "train":
+        accum = max(cfg.grad_accum, 1)
+        return p_bytes * (2 * accum + 3) + act + logits
+    return p_bytes + act + logits
+
+
+def model_flops(cfg, shape, step: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D tokens (train) / 2·N·D (inference)."""
+    n = cfg.active_param_count()
+    if step == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if step == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch

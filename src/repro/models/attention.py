@@ -1,0 +1,330 @@
+"""Attention variants: MHA/GQA/MQA (+bias, RoPE), MLA, sliding window, caches.
+
+Long-sequence forward passes use a *block-causal chunked* computation: an
+unrolled loop over query chunks where chunk i only contracts against keys
+[lo_i, hi_i) with **static** slice bounds — so the lowered HLO performs the
+causally-required FLOPs only (no full S² score buffer materializes; memory is
+O(chunk × window)). This is the portable jnp path; `repro.kernels.
+flash_attention` is the TPU Pallas version with the same blocking.
+
+Caches:
+  full cache    {'k','v': (B, S_max, Hkv, hd), 'pos': ()}       decode_32k
+  rolling cache {'k','v': (B, W, Hkv, hd), 'slot_pos': (W,), 'pos': ()}
+                (sliding-window / long_500k)
+  MLA cache     {'c_kv': (B, S, r), 'k_rope': (B, S, 1, hd_r), 'pos': ()}
+                (compressed latent — the point of MLA)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import Params, apply_rope, dense_init, dtype_of
+
+Array = jax.Array
+
+NEG_INF = -2.0 ** 30  # large-negative in f32 (avoids bf16 overflow on cast)
+CHUNK = 2048          # query/key chunk for block-causal attention
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key) -> Params:
+    dt = dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        ks = jax.random.split(key, 6)
+        qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "q_down": dense_init(ks[0], (cfg.d_model, m.q_lora_rank), dt),
+            "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dt)},
+            "q_up": dense_init(ks[1], (m.q_lora_rank,
+                                       cfg.num_heads * qk_hd), dt),
+            "kv_down": dense_init(ks[2], (cfg.d_model,
+                                          m.kv_lora_rank + m.qk_rope_head_dim),
+                                  dt),
+            "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dt)},
+            "kv_up": dense_init(ks[3], (m.kv_lora_rank, cfg.num_heads *
+                                        (m.qk_nope_head_dim + m.v_head_dim)),
+                                dt),
+            "o": dense_init(ks[4], (cfg.num_heads * m.v_head_dim,
+                                    cfg.d_model), dt),
+        }
+    ks = jax.random.split(key, 4)
+    p = {
+        "q": dense_init(ks[0], (cfg.d_model, cfg.num_heads * hd), dt),
+        "k": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads * hd), dt),
+        "v": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads * hd), dt),
+        "o": dense_init(ks[3], (cfg.num_heads * hd, cfg.d_model), dt),
+    }
+    if cfg.qkv_bias:
+        p["q_b"] = jnp.zeros((cfg.num_heads * hd,), dt)
+        p["k_b"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+        p["v_b"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+    return p
+
+
+def init_cross_attention(cfg: ModelConfig, key) -> Params:
+    return init_attention(cfg, key)   # same projections, keys from memory
+
+
+# ---------------------------------------------------------------------------
+# core score/combine (single q-block vs single kv-block)
+# ---------------------------------------------------------------------------
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array]) -> Array:
+    """q/k: (B,S,*,qk_hd); v: (B,Sk,Hkv,v_hd); mask bcastable (B,1,Sq,Sk).
+
+    v_hd may differ from qk_hd (MLA decompresses to different dims)."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                           scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def block_causal_attention(q: Array, k: Array, v: Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           chunk: int = CHUNK) -> Array:
+    """Chunked attention with static per-chunk key slices (causal FLOPs only).
+
+    q/k/v over the same sequence; q: (B,S,H,hd), k/v: (B,S,Hkv,hd).
+    """
+    b, s, h, hd = q.shape
+    if s <= chunk:
+        mask = None
+        if causal:
+            qpos = jnp.arange(s)
+            mask = qpos[:, None] >= qpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - qpos[None, :] < window
+            mask = mask[None, None]
+        return _sdpa(q, k, v, mask)
+
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    outs = []
+    for i in range(n_chunks):
+        q_lo, q_hi = i * chunk, (i + 1) * chunk
+        k_lo = 0 if window is None else max(0, q_lo - window)
+        k_lo = (k_lo // chunk) * chunk           # align to chunk
+        k_hi = q_hi if causal else s
+        qi = q[:, q_lo:q_hi]
+        ki = k[:, k_lo:k_hi]
+        vi = v[:, k_lo:k_hi]
+        qpos = jnp.arange(q_lo, q_hi)
+        kpos = jnp.arange(k_lo, k_hi)
+        mask = jnp.ones((chunk, k_hi - k_lo), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        outs.append(_sdpa(qi, ki, vi, mask[None, None]))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (train/prefill + cached decode)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: Array):
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = x @ p["q"]
+    k = x @ p["k"]
+    v = x @ p["v"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["q_b"], k + p["k_b"], v + p["v_b"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def gqa_forward(cfg: ModelConfig, p: Params, x: Array, *,
+                positions: Optional[Array] = None,
+                causal: bool = True,
+                window: Optional[int] = None) -> Array:
+    """Full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.sharding import hints
+    q, k, v = hints.hint_qkv(q, k, v)
+    out = block_causal_attention(q, k, v, causal=causal, window=window)
+    return out.reshape(b, s, -1) @ p["o"]
+
+
+def gqa_cross_forward(cfg: ModelConfig, p: Params, x: Array,
+                      memory: Array) -> Array:
+    """Cross-attention: queries from x, keys/values from encoder memory."""
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    q = (x @ p["q"]).reshape(b, s, cfg.num_heads, hd)
+    k = (memory @ p["k"]).reshape(b, sm, cfg.num_kv_heads, hd)
+    v = (memory @ p["v"]).reshape(b, sm, cfg.num_kv_heads, hd)
+    if cfg.qkv_bias:
+        q = q + p["q_b"].reshape(cfg.num_heads, hd)
+        k = k + p["k_b"].reshape(cfg.num_kv_heads, hd)
+        v = v + p["v_b"].reshape(cfg.num_kv_heads, hd)
+    out = _sdpa(q, k, v, None)
+    return out.reshape(b, s, -1) @ p["o"]
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   rolling: bool = False) -> Params:
+    hd = cfg.resolved_head_dim
+    dt = dtype_of(cfg)
+    size = min(max_len, cfg.sliding_window) if rolling and cfg.sliding_window \
+        else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
+        "slot_pos": jnp.full((size,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                    x_t: Array, rolling: bool = False) -> tuple[Array, Params]:
+    """One token: x_t (B, 1, D) against the cache."""
+    hd = cfg.resolved_head_dim
+    b = x_t.shape[0]
+    pos = cache["pos"]
+    q, k, v = _project_qkv(cfg, p, x_t)
+    pos_arr = pos[None, None]
+    q = apply_rope(q, jnp.broadcast_to(pos_arr, (b, 1)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(pos_arr, (b, 1)), cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = (pos % size) if rolling else jnp.minimum(pos, size - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos[None], (slot,))
+
+    window = cfg.sliding_window
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= slot_pos > pos - window
+    mask = valid[None, None, None, :]                    # (1,1,1,size)
+    out = _sdpa(q, ck, cv, mask)
+    out = out.reshape(b, 1, -1) @ p["o"]
+    new_cache = {"k": ck, "v": cv, "slot_pos": slot_pos, "pos": pos + 1}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3) — compressed-latent cache; absorbed decode
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(cfg: ModelConfig, p: Params, x: Array, positions: Array):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    cq = layers.apply_norm(cfg, p["q_norm"], x @ p["q_down"])
+    q = (cq @ p["q_up"]).reshape(b, s, h, m.qk_nope_head_dim
+                                 + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["kv_down"]
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = layers.apply_norm(cfg, p["kv_norm"], c_kv)       # (B,S,r)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)                      # (B,S,1,hd_r)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(cfg: ModelConfig, p: Params, x: Array, *,
+                positions: Optional[Array] = None,
+                window: Optional[int] = None) -> Array:
+    """Full-sequence MLA (train / prefill): decompress k/v, standard SDPA."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    kv = (c_kv @ p["kv_up"]).reshape(b, s, h,
+                                     m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))],
+        axis=-1)
+    from repro.sharding import hints
+    q, k, v = hints.hint_qkv(q, k, v)
+    out = block_causal_attention(q, k, v, causal=True, window=window)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    return out @ p["o"]
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    m = cfg.mla
+    dt = dtype_of(cfg)
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_len, 1, m.qk_rope_head_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                    x_t: Array) -> tuple[Array, Params]:
+    """Absorbed MLA decode: scores in latent space — O(S·r) per head group,
+    the compressed cache never decompresses to per-head K/V."""
+    m = cfg.mla
+    b = x_t.shape[0]
+    h = cfg.num_heads
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(cfg, p, x_t, positions)
+
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_t, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_t,
+                                          (0, pos, 0, 0))
+    s_max = c_kv.shape[1]
+
+    # absorb W_uk into q: q_lat (B,1,H,r).  kv_up columns are laid out
+    # per-head interleaved [k_nope | v] (matching mla_forward's reshape)
+    w_full = p["kv_up"].reshape(m.kv_lora_rank, h,
+                                m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = w_full[:, :, :m.qk_nope_head_dim]
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scores = jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv,
+                        preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bqhd,bkzd->bhqk", q_rope, k_rope,
+                         preferred_element_type=jnp.float32)
+    scores *= 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    valid = jnp.arange(s_max) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    # combine in latent space, then decompress through W_uv
+    lat = jnp.einsum("bhqk,bkr->bqhr", probs.astype(c_kv.dtype), c_kv)
+    w_uv = w_full[:, :, m.qk_nope_head_dim:]
+    out = jnp.einsum("bqhr,rhd->bqhd", lat, w_uv)
+    out = out.reshape(b, 1, h * m.v_head_dim) @ p["o"]
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope, "pos": pos + 1}
+    return out, new_cache

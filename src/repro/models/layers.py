@@ -1,0 +1,154 @@
+"""Shared layer primitives: norms, gated/ungated MLPs, RoPE, embeddings.
+
+Functional style: ``init_*`` builds a param dict, ``apply_*`` consumes it.
+Params live in the config dtype (bf16 for the big archs); norm statistics,
+softmax and rotary math run in f32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, dtype, scale: float | None = None) -> Array:
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: int) -> Params:
+    p = {"scale": jnp.ones((dim,), dtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype_of(cfg))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants (swiglu / geglu gated; relu2 = squared ReLU (Nemotron); gelu)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_model: int, d_ff: int) -> Params:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"down": dense_init(ks[2], (d_ff, d_model), dt)}
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["gate"] = dense_init(ks[0], (d_model, d_ff), dt)
+        p["up"] = dense_init(ks[1], (d_model, d_ff), dt)
+    else:
+        p["up"] = dense_init(ks[1], (d_model, d_ff), dt)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: Array) -> Array:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["gate"], approximate=True) * (x @ p["up"])
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["up"]))
+    else:
+        h = jax.nn.gelu(x @ p["up"], approximate=True)
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]             # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(cfg: ModelConfig, key) -> Params:
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"table": dense_init(k1, (cfg.vocab_size, cfg.d_model), dt, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+def embed(p: Params, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(cfg: ModelConfig, p: Params, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["table"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"],
+                            preferred_element_type=jnp.float32)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (mamba2 / RG-LRU blocks) with streaming state
+# ---------------------------------------------------------------------------
+
+def init_conv(cfg: ModelConfig, key, width: int, kernel: int) -> Params:
+    dt = dtype_of(cfg)
+    return {"w": dense_init(key, (kernel, width), dt, scale=0.5),
+            "b": jnp.zeros((width,), dt)}
+
+
+def apply_conv(p: Params, x: Array) -> Array:
+    """Causal depthwise conv over (B, S, W)."""
+    k = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * p["w"][i] for i in range(k))
+    return out + p["b"]
+
+
+def apply_conv_step(p: Params, state: Array, x_t: Array):
+    """One decode step. state: (B, k-1, W) past inputs; x_t: (B, W)."""
+    k = p["w"].shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, k, W)
+    out = jnp.einsum("bkw,kw->bw", window, p["w"]) + p["b"]
+    return out, window[:, 1:, :]

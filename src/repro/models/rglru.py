@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrent block: two input branches (gate: GeLU; signal: conv1d → RG-LRU),
+elementwise merge, output projection.  RG-LRU:
+
+    r_t = σ(W_a x_t + b_a)            recurrence gate (block-diagonal W)
+    i_t = σ(W_x x_t + b_x)            input gate
+    a_t = exp(−c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Sequence form uses ``jax.lax.associative_scan`` (log-depth on TPU);
+decode is the O(1) per-token recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import Params, dense_init, dtype_of
+
+Array = jax.Array
+
+N_DIAG_BLOCKS = 8
+
+
+def width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def init_rglru_block(cfg: ModelConfig, key) -> Params:
+    dt = dtype_of(cfg)
+    w = width(cfg)
+    bs = w // N_DIAG_BLOCKS
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, w)) / cfg.hybrid.lru_c))
+    return {
+        "in_x": dense_init(ks[0], (cfg.d_model, w), dt),
+        "in_gate": dense_init(ks[1], (cfg.d_model, w), dt),
+        "conv": layers.init_conv(cfg, ks[2], w, cfg.hybrid.conv_kernel),
+        "gate_a": dense_init(ks[3], (N_DIAG_BLOCKS, bs, bs), dt),
+        "gate_a_b": jnp.zeros((w,), jnp.float32),
+        "gate_x": dense_init(ks[4], (N_DIAG_BLOCKS, bs, bs), dt),
+        "gate_x_b": jnp.zeros((w,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "out": dense_init(ks[5], (w, cfg.d_model), dt),
+    }
+
+
+def _block_diag(gate_w: Array, x: Array) -> Array:
+    """x: (..., W) through block-diagonal weight (NB, bs, bs)."""
+    nb, bs, _ = gate_w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, bs))
+    out = jnp.einsum("...nb,nbc->...nc", xb, gate_w)
+    return out.reshape(x.shape)
+
+
+def _rglru_gates(cfg: ModelConfig, p: Params, x: Array):
+    """Returns (log_a, scaled_input): h_t = exp(log_a)h + √(1−a²)(i·x)."""
+    r = jax.nn.sigmoid(_block_diag(p["gate_a"], x).astype(jnp.float32)
+                       + p["gate_a_b"])
+    i = jax.nn.sigmoid(_block_diag(p["gate_x"], x).astype(jnp.float32)
+                       + p["gate_x_b"])
+    log_a = -cfg.hybrid.lru_c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    scaled = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * \
+        (i * x.astype(jnp.float32))
+    return log_a, scaled
+
+
+def rglru_scan(cfg: ModelConfig, p: Params, x: Array,
+               h0: Array | None = None) -> tuple[Array, Array]:
+    """Linear recurrence over (B, S, W) via associative scan."""
+    log_a, scaled = _rglru_gates(cfg, p, x)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        scaled = scaled.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, scaled), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block_forward(cfg: ModelConfig, p: Params, x: Array) -> Array:
+    """(B, S, D) -> (B, S, D)."""
+    gate = jax.nn.gelu(x @ p["in_gate"], approximate=True)
+    sig = x @ p["in_x"]
+    sig = layers.apply_conv(p["conv"], sig)
+    h, _ = rglru_scan(cfg, p, sig)
+    return (h * gate) @ p["out"]
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> Params:
+    dt = dtype_of(cfg)
+    w = width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.hybrid.conv_kernel - 1, w), dt),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_block_step(cfg: ModelConfig, p: Params, cache: Params,
+                     x_t: Array) -> tuple[Array, Params]:
+    """One decode token: x_t (B, 1, D)."""
+    xt = x_t[:, 0, :]
+    gate = jax.nn.gelu(xt @ p["in_gate"], approximate=True)
+    sig = xt @ p["in_x"]
+    sig, conv_state = layers.apply_conv_step(p["conv"], cache["conv"], sig)
+    log_a, scaled = _rglru_gates(cfg, p, sig)
+    h = jnp.exp(log_a) * cache["h"] + scaled
+    out = ((h.astype(xt.dtype) * gate) @ p["out"])[:, None, :]
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,199 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within a chunk the recurrence is computed as dense
+(MXU-friendly) matmuls with a decay-weighted score matrix; states are carried
+across chunks with a scan — exactly the structure the paper derives as the
+"dual" form.  ``repro.kernels.ssd_scan`` is the Pallas/TPU version of the
+chunk kernel; this file is the portable jnp implementation (and its oracle).
+
+Block layout (simplified Mamba-2):
+  in_proj  : D -> [z (d_in), x (d_in), B (G·N), C (G·N), dt (H)]
+  conv1d   : causal depthwise over [x, B, C]
+  SSD      : h_t = exp(dt·A) h_{t-1} + dt·B_t ⊗ x_t ;  y_t = C_t · h_t
+  out      : y · silu(z)  -> out_proj
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import Params, dense_init, dtype_of
+
+Array = jax.Array
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads, s.n_groups, s.d_state
+
+
+def init_ssm(cfg: ModelConfig, key) -> Params:
+    s = cfg.ssm
+    dt = dtype_of(cfg)
+    d_in, h, g, n = dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * g * n + h
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, proj_out), dt),
+        "conv": layers.init_conv(cfg, ks[1], d_in + 2 * g * n, s.conv_kernel),
+        "a_log": jnp.zeros((h,), jnp.float32),     # A = -exp(a_log) ∈ (-∞,0)
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, cfg.d_model), dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: Array):
+    d_in, h, g, n = dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_in + 2 * g * n], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _split_xbc(cfg: ModelConfig, xbc: Array):
+    d_in, h, g, n = dims(cfg)
+    x, bc = jnp.split(xbc, [d_in], axis=-1)
+    b_mat, c_mat = jnp.split(bc, [g * n], axis=-1)
+    return x, b_mat, c_mat
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array,
+                chunk: int, h0: Optional[Array] = None
+                ) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x:     (B, S, H, P)   per-head inputs
+    dt:    (B, S, H)      softplus-ed timestep
+    a:     (H,)           negative decay rate (A = -exp(a_log))
+    b_mat: (B, S, G, N)   input projections  (G groups broadcast over H)
+    c_mat: (B, S, G, N)   output projections
+    h0:    (B, H, P, N)   initial state (decode/resume)
+    returns (y (B,S,H,P), h_final (B,H,P,N))
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = jnp.repeat(b_mat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(c_mat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    da = dtc * a                                   # (B,NC,L,H) log-decay
+    cum = jnp.cumsum(da, axis=2)                   # within-chunk cumulative
+
+    # intra-chunk (dual / attention-like) term:
+    #   scores[t, u] = C_t · B_u · exp(cum_t − cum_u) · dt_u,  u ≤ t
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("bclhn,bcuhn->bcluh", cc, bc) * decay  # (B,NC,L,U,H)
+    scores = scores * dtc[:, :, None, :, :]        # weight by dt_u
+    y_intra = jnp.einsum("bcluh,bcuhp->bclhp", scores, xc)
+
+    # chunk-final states: h_c = Σ_u exp(cum_L − cum_u)·dt_u · B_u ⊗ x_u
+    w_state = jnp.exp(cum[:, :, -1:, :] - cum) * dtc    # (B,NC,L,H)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn", w_state, bc, xc,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over chunk-level decays (f32 carry)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,NC,H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                   # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev                            # emit state BEFORE
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+    states_t = states.transpose(1, 0, 2, 3, 4)          # (NC,B,H,P,N)
+    decay_t = chunk_decay.transpose(1, 0, 2)            # (NC,B,H)
+    h_final, h_prevs = jax.lax.scan(scan_fn, h0, (states_t, decay_t))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (B,NC,H,P,N)
+
+    # contribution of the carried-in state to each position
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", cc, h_prevs,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, h_final
+
+
+def ssm_forward(cfg: ModelConfig, p: Params, xin: Array,
+                use_kernel: bool = False) -> Array:
+    """Full-sequence mixer forward: (B, S, D) -> (B, S, D)."""
+    s_cfg = cfg.ssm
+    d_in, h, g, n = dims(cfg)
+    bsz, s, _ = xin.shape
+    proj = xin @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = layers.apply_conv(p["conv"], xbc)
+    xbc = jax.nn.silu(xbc)
+    x, b_mat, c_mat = _split_xbc(cfg, xbc)
+
+    x = x.reshape(bsz, s, h, s_cfg.head_dim)
+    b_mat = b_mat.reshape(bsz, s, g, n)
+    c_mat = c_mat.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd_scan(x, dt, a, b_mat, c_mat, chunk=s_cfg.chunk_size)
+    else:
+        chunk = min(s_cfg.chunk_size, s)
+        y, _ = ssd_chunked(x, dt, a, b_mat, c_mat, chunk)
+    y = y + x * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, s, d_in).astype(xin.dtype) * jax.nn.silu(z)
+    return (y @ p["out_proj"]).astype(xin.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode: single-token recurrence against carried (conv, ssm) state
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Params:
+    s = cfg.ssm
+    d_in, h, g, n = dims(cfg)
+    dt = dtype_of(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, d_in + 2 * g * n), dt),
+        "h": jnp.zeros((batch, h, s.head_dim, n), dt),
+    }
+
+
+def ssm_decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                    x_t: Array) -> tuple[Array, Params]:
+    """x_t: (B, 1, D) -> (B, 1, D); O(1) state update (the SSM advantage)."""
+    s_cfg = cfg.ssm
+    d_in, h, g, n = dims(cfg)
+    bsz = x_t.shape[0]
+    proj = x_t[:, 0, :] @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_state = layers.apply_conv_step(p["conv"], cache["conv"], xbc)
+    xbc = jax.nn.silu(xbc)
+    x, b_mat, c_mat = _split_xbc(cfg, xbc)
+
+    x = x.reshape(bsz, h, s_cfg.head_dim)
+    b_mat = jnp.repeat(b_mat.reshape(bsz, g, n), h // g, axis=1)
+    c_mat = jnp.repeat(c_mat.reshape(bsz, g, n), h // g, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    decay = jnp.exp(dt * -jnp.exp(p["a_log"]))          # (B, H)
+
+    h_new = cache["h"] * decay[:, :, None, None].astype(x.dtype) + \
+        jnp.einsum("bhp,bhn,bh->bhpn", x, b_mat, dt.astype(x.dtype))
+    y = jnp.einsum("bhn,bhpn->bhp", c_mat, h_new)
+    y = y + x * p["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, d_in) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": conv_state, "h": h_new}

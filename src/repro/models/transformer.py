@@ -1,0 +1,377 @@
+"""Composable transformer stacks for all assigned architecture families.
+
+A model is a list of **segments**: (kind, count).  Per-layer params are
+stacked along a leading ``count`` axis and the forward pass is a
+``lax.scan`` over that axis (one trace per segment — compile time stays
+O(#kinds), not O(#layers)), optionally rematerialized.  The stacked layer
+axis is also what the generic layerwise-ADMM trainer shards over 'model'
+(the paper's layer parallelism as axis sharding — DESIGN.md §3).
+
+Segment kinds:
+  attn_mlp    pre-norm attention (GQA/MQA/MLA per cfg) + dense FFN
+  attn_moe    attention + MoE FFN (shared + routed experts)
+  ssm         Mamba-2 SSD mixer (no FFN)
+  hybrid      one (rglru, rglru, local-attn) period, each with FFN
+  rglru_mlp   single RG-LRU block + FFN (hybrid tail layers)
+  enc         bidirectional encoder layer (enc-dec archs)
+  dec         causal self-attn + cross-attn + FFN decoder layer
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe as moe_lib, rglru, ssm
+from repro.models.layers import Params
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# segment plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int
+
+
+def arch_segments(cfg: ModelConfig) -> list[Segment]:
+    if cfg.is_encoder_decoder:
+        return [Segment("enc", cfg.num_layers),
+                Segment("dec", cfg.num_decoder_layers)]
+    if cfg.arch_type == "ssm":
+        return [Segment("ssm", cfg.num_layers)]
+    if cfg.hybrid is not None:
+        period = len(cfg.hybrid.pattern)
+        n_periods, tail = divmod(cfg.num_layers, period)
+        segs = [Segment("hybrid", n_periods)]
+        if tail:
+            segs.append(Segment("rglru_mlp", tail))
+        return segs
+    if cfg.moe is not None:
+        segs = []
+        if cfg.moe.first_dense_layers:
+            segs.append(Segment("attn_mlp", cfg.moe.first_dense_layers))
+        segs.append(Segment("attn_moe",
+                            cfg.num_layers - cfg.moe.first_dense_layers))
+        return segs
+    return [Segment("attn_mlp", cfg.num_layers)]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _dense_ff_width(cfg: ModelConfig) -> int:
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        return cfg.moe.dense_d_ff or cfg.d_ff
+    return cfg.d_ff
+
+
+def init_layer(cfg: ModelConfig, kind: str, key) -> Params:
+    ks = jax.random.split(key, 8)
+    if kind == "attn_mlp":
+        return {
+            "norm1": layers.init_norm(cfg, cfg.d_model),
+            "attn": attention.init_attention(cfg, ks[0]),
+            "norm2": layers.init_norm(cfg, cfg.d_model),
+            "mlp": layers.init_mlp(cfg, ks[1], cfg.d_model,
+                                   _dense_ff_width(cfg)),
+        }
+    if kind == "attn_moe":
+        return {
+            "norm1": layers.init_norm(cfg, cfg.d_model),
+            "attn": attention.init_attention(cfg, ks[0]),
+            "norm2": layers.init_norm(cfg, cfg.d_model),
+            "moe": moe_lib.init_moe(cfg, ks[1]),
+        }
+    if kind == "ssm":
+        return {
+            "norm": layers.init_norm(cfg, cfg.d_model),
+            "mixer": ssm.init_ssm(cfg, ks[0]),
+        }
+    if kind == "hybrid":
+        p: Params = {}
+        for i, blk in enumerate(cfg.hybrid.pattern):
+            sub = {
+                "norm1": layers.init_norm(cfg, cfg.d_model),
+                "norm2": layers.init_norm(cfg, cfg.d_model),
+                "mlp": layers.init_mlp(cfg, ks[2 * i + 1], cfg.d_model,
+                                       cfg.d_ff),
+            }
+            if blk == "rglru":
+                sub["rg"] = rglru.init_rglru_block(cfg, ks[2 * i])
+            else:
+                sub["attn"] = attention.init_attention(cfg, ks[2 * i])
+            p[f"blk{i}"] = sub
+        return p
+    if kind == "rglru_mlp":
+        return {
+            "norm1": layers.init_norm(cfg, cfg.d_model),
+            "rg": rglru.init_rglru_block(cfg, ks[0]),
+            "norm2": layers.init_norm(cfg, cfg.d_model),
+            "mlp": layers.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff),
+        }
+    if kind == "enc":
+        return {
+            "norm1": layers.init_norm(cfg, cfg.d_model),
+            "attn": attention.init_attention(cfg, ks[0]),
+            "norm2": layers.init_norm(cfg, cfg.d_model),
+            "mlp": layers.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff),
+        }
+    if kind == "dec":
+        return {
+            "norm1": layers.init_norm(cfg, cfg.d_model),
+            "attn": attention.init_attention(cfg, ks[0]),
+            "norm_x": layers.init_norm(cfg, cfg.d_model),
+            "cross": attention.init_cross_attention(cfg, ks[1]),
+            "norm2": layers.init_norm(cfg, cfg.d_model),
+            "mlp": layers.init_mlp(cfg, ks[2], cfg.d_model, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-layer forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_fwd(cfg: ModelConfig, p: Params, x: Array, *, causal=True,
+              window=None) -> Array:
+    if cfg.mla is not None:
+        return attention.mla_forward(cfg, p, x, window=window)
+    return attention.gqa_forward(cfg, p, x, causal=causal, window=window)
+
+
+def apply_layer(cfg: ModelConfig, kind: str, p: Params, x: Array, *,
+                window: Optional[int] = None,
+                memory: Optional[Array] = None,
+                use_kernel: bool = False) -> tuple[Array, Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_mlp", "enc"):
+        causal = kind != "enc"
+        x = x + _attn_fwd(cfg, p["attn"],
+                          layers.apply_norm(cfg, p["norm1"], x),
+                          causal=causal, window=window)
+        x = x + layers.apply_mlp(cfg, p["mlp"],
+                                 layers.apply_norm(cfg, p["norm2"], x))
+    elif kind == "attn_moe":
+        x = x + _attn_fwd(cfg, p["attn"],
+                          layers.apply_norm(cfg, p["norm1"], x),
+                          window=window)
+        h, aux = moe_lib.apply_moe(cfg, p["moe"],
+                                   layers.apply_norm(cfg, p["norm2"], x))
+        x = x + h
+    elif kind == "ssm":
+        x = x + ssm.ssm_forward(cfg, p["mixer"],
+                                layers.apply_norm(cfg, p["norm"], x),
+                                use_kernel=use_kernel)
+    elif kind == "hybrid":
+        for i, blk in enumerate(cfg.hybrid.pattern):
+            sub = p[f"blk{i}"]
+            h_in = layers.apply_norm(cfg, sub["norm1"], x)
+            if blk == "rglru":
+                x = x + rglru.rglru_block_forward(cfg, sub["rg"], h_in)
+            else:
+                x = x + attention.gqa_forward(
+                    cfg, sub["attn"], h_in, causal=True,
+                    window=cfg.hybrid.local_window)
+            x = x + layers.apply_mlp(cfg, sub["mlp"],
+                                     layers.apply_norm(cfg, sub["norm2"], x))
+    elif kind == "rglru_mlp":
+        x = x + rglru.rglru_block_forward(
+            cfg, p["rg"], layers.apply_norm(cfg, p["norm1"], x))
+        x = x + layers.apply_mlp(cfg, p["mlp"],
+                                 layers.apply_norm(cfg, p["norm2"], x))
+    elif kind == "dec":
+        x = x + _attn_fwd(cfg, p["attn"],
+                          layers.apply_norm(cfg, p["norm1"], x),
+                          window=window)
+        x = x + attention.gqa_cross_forward(
+            cfg, p["cross"], layers.apply_norm(cfg, p["norm_x"], x), memory)
+        x = x + layers.apply_mlp(cfg, p["mlp"],
+                                 layers.apply_norm(cfg, p["norm2"], x))
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# per-layer decode step (one token against the layer's cache)
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     rolling: bool, memory_len: int = 0) -> Params:
+    if kind in ("attn_mlp", "attn_moe"):
+        if cfg.mla is not None:
+            return attention.init_mla_cache(cfg, batch, max_len)
+        return attention.init_gqa_cache(cfg, batch, max_len, rolling=rolling)
+    if kind == "ssm":
+        return ssm.init_ssm_cache(cfg, batch)
+    if kind == "hybrid":
+        c: Params = {}
+        for i, blk in enumerate(cfg.hybrid.pattern):
+            if blk == "rglru":
+                c[f"blk{i}"] = rglru.init_rglru_cache(cfg, batch)
+            else:
+                c[f"blk{i}"] = attention.init_gqa_cache(
+                    cfg, batch, min(max_len, cfg.hybrid.local_window),
+                    rolling=True)
+        return c
+    if kind == "rglru_mlp":
+        return rglru.init_rglru_cache(cfg, batch)
+    if kind == "dec":
+        hd = cfg.resolved_head_dim
+        dt = layers.dtype_of(cfg)
+        return {
+            "self": attention.init_gqa_cache(cfg, batch, max_len,
+                                             rolling=rolling),
+            "cross_k": jnp.zeros((batch, memory_len, cfg.num_kv_heads, hd),
+                                 dt),
+            "cross_v": jnp.zeros((batch, memory_len, cfg.num_kv_heads, hd),
+                                 dt),
+        }
+    raise ValueError(kind)
+
+
+def apply_layer_step(cfg: ModelConfig, kind: str, p: Params, cache: Params,
+                     x_t: Array, *, rolling: bool = False
+                     ) -> tuple[Array, Params]:
+    if kind in ("attn_mlp", "attn_moe"):
+        h_in = layers.apply_norm(cfg, p["norm1"], x_t)
+        if cfg.mla is not None:
+            h, cache = attention.mla_decode_step(cfg, p["attn"], cache, h_in)
+        else:
+            h, cache = attention.gqa_decode_step(cfg, p["attn"], cache, h_in,
+                                                 rolling=rolling)
+        x_t = x_t + h
+        h_in = layers.apply_norm(cfg, p["norm2"], x_t)
+        if kind == "attn_mlp":
+            x_t = x_t + layers.apply_mlp(cfg, p["mlp"], h_in)
+        else:
+            h, _ = moe_lib.apply_moe(cfg, p["moe"], h_in)
+            x_t = x_t + h
+        return x_t, cache
+    if kind == "ssm":
+        h_in = layers.apply_norm(cfg, p["norm"], x_t)
+        h, cache = ssm.ssm_decode_step(cfg, p["mixer"], cache, h_in)
+        return x_t + h, cache
+    if kind == "hybrid":
+        new_c: Params = {}
+        for i, blk in enumerate(cfg.hybrid.pattern):
+            sub = p[f"blk{i}"]
+            h_in = layers.apply_norm(cfg, sub["norm1"], x_t)
+            if blk == "rglru":
+                h, new_c[f"blk{i}"] = rglru.rglru_block_step(
+                    cfg, sub["rg"], cache[f"blk{i}"], h_in)
+            else:
+                h, new_c[f"blk{i}"] = attention.gqa_decode_step(
+                    cfg, sub["attn"], cache[f"blk{i}"], h_in, rolling=True)
+            x_t = x_t + h
+            x_t = x_t + layers.apply_mlp(
+                cfg, sub["mlp"], layers.apply_norm(cfg, sub["norm2"], x_t))
+        return x_t, new_c
+    if kind == "rglru_mlp":
+        h_in = layers.apply_norm(cfg, p["norm1"], x_t)
+        h, cache = rglru.rglru_block_step(cfg, p["rg"], cache, h_in)
+        x_t = x_t + h
+        x_t = x_t + layers.apply_mlp(cfg, p["mlp"],
+                                     layers.apply_norm(cfg, p["norm2"], x_t))
+        return x_t, cache
+    if kind == "dec":
+        h_in = layers.apply_norm(cfg, p["norm1"], x_t)
+        h, self_c = attention.gqa_decode_step(cfg, p["attn"], cache["self"],
+                                              h_in, rolling=rolling)
+        x_t = x_t + h
+        # cross-attention against the precomputed memory k/v
+        h_in = layers.apply_norm(cfg, p["norm_x"], x_t)
+        hd = cfg.resolved_head_dim
+        b = x_t.shape[0]
+        q = (h_in @ p["cross"]["q"]).reshape(b, 1, cfg.num_heads, hd)
+        h = attention._sdpa(q, cache["cross_k"], cache["cross_v"], None)
+        x_t = x_t + h.reshape(b, 1, -1) @ p["cross"]["o"]
+        x_t = x_t + layers.apply_mlp(cfg, p["mlp"],
+                                     layers.apply_norm(cfg, p["norm2"], x_t))
+        return x_t, {"self": self_c, "cross_k": cache["cross_k"],
+                     "cross_v": cache["cross_v"]}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stacked-segment init / forward / decode
+# ---------------------------------------------------------------------------
+
+def init_stack(cfg: ModelConfig, key) -> Params:
+    segs = arch_segments(cfg)
+    params: Params = {}
+    for seg in segs:
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, seg.count)
+        params[seg.kind] = jax.vmap(partial(init_layer, cfg, seg.kind))(keys)
+    return params
+
+
+def apply_stack(cfg: ModelConfig, params: Params, x: Array, *,
+                window: Optional[int] = None,
+                memory: Optional[Array] = None,
+                use_kernel: bool = False,
+                only_kinds: Optional[tuple[str, ...]] = None
+                ) -> tuple[Array, Array]:
+    """Scan each segment's stacked layers. Returns (x, total_aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg in arch_segments(cfg):
+        if only_kinds is not None and seg.kind not in only_kinds:
+            continue
+        def body(carry, layer_p, kind=seg.kind):
+            from repro.sharding import hints
+            carry = hints.hint_residual(carry)
+            h, aux = apply_layer(cfg, kind, layer_p, carry, window=window,
+                                 memory=memory, use_kernel=use_kernel)
+            return h, aux
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, params[seg.kind])
+        aux_total = aux_total + auxs.sum()
+    return x, aux_total
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     rolling: bool, memory_len: int = 0) -> Params:
+    caches: Params = {}
+    for seg in arch_segments(cfg):
+        if seg.kind == "enc":        # encoder has no decode step
+            continue
+        one = init_layer_cache(cfg, seg.kind, batch, max_len, rolling,
+                               memory_len)
+        caches[seg.kind] = jax.tree.map(
+            lambda l: jnp.zeros((seg.count,) + l.shape, l.dtype), one)
+        # slot_pos must start at -1 (invalid), not 0
+        caches[seg.kind] = jax.tree_util.tree_map_with_path(
+            lambda path, l: jnp.full_like(l, -1)
+            if any(getattr(k, "key", None) == "slot_pos" for k in path)
+            else l, caches[seg.kind])
+    return caches
+
+
+def decode_stack(cfg: ModelConfig, params: Params, caches: Params,
+                 x_t: Array, *, rolling: bool = False
+                 ) -> tuple[Array, Params]:
+    new_caches: Params = {}
+    for seg in arch_segments(cfg):
+        if seg.kind == "enc":
+            continue
+        def body(carry, xs, kind=seg.kind):
+            layer_p, layer_c = xs
+            h, new_c = apply_layer_step(cfg, kind, layer_p, layer_c, carry,
+                                        rolling=rolling)
+            return h, new_c
+        x_t, new_caches[seg.kind] = jax.lax.scan(
+            body, x_t, (params[seg.kind], caches[seg.kind]))
+    return x_t, new_caches

@@ -1,0 +1,122 @@
+"""First-order optimizers (optax-style, self-contained).
+
+Includes the paper's §4.2 comparison methods — GD, Adam, Adagrad, Adadelta —
+plus momentum/AdamW used by the transformer substrate. ``update`` returns the
+*delta* to add to params (optax convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def _tree_zeros(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return _tree_zeros(params)
+
+    def update(grads, vel, params=None):
+        vel = jax.tree.map(lambda v, g: beta * v + g, vel, grads)
+        return jax.tree.map(lambda v: -lr * v, vel), vel
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """Adam with f32 moments (params may be bf16 — deltas cast back)."""
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                         g.astype(jnp.float32) * g.astype(jnp.float32),
+                         state["v"], grads)
+        mh_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+        vh_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+
+        def delta(m, v, p):
+            d = -lr * (m * mh_scale) / (jnp.sqrt(v * vh_scale) + eps)
+            if weight_decay and p is not None:
+                d = d - lr * weight_decay * p.astype(jnp.float32)
+            return d.astype(p.dtype) if p is not None else d
+
+        if params is None:
+            deltas = jax.tree.map(lambda m, v: delta(m, v, None), m, v)
+        else:
+            deltas = jax.tree.map(delta, m, v, params)
+        return deltas, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return _tree_zeros(params)
+
+    def update(grads, acc, params=None):
+        acc = jax.tree.map(lambda a, g: a + g * g, acc, grads)
+        deltas = jax.tree.map(lambda g, a: -lr * g / (jnp.sqrt(a) + eps),
+                              grads, acc)
+        return deltas, acc
+
+    return Optimizer(init, update)
+
+
+def adadelta(lr: float = 1.0, rho: float = 0.95,
+             eps: float = 1e-6) -> Optimizer:
+    def init(params):
+        return {"acc_g": _tree_zeros(params), "acc_d": _tree_zeros(params)}
+
+    def update(grads, state, params=None):
+        acc_g = jax.tree.map(lambda a, g: rho * a + (1 - rho) * g * g,
+                             state["acc_g"], grads)
+        deltas = jax.tree.map(
+            lambda g, ag, ad: -lr * g * jnp.sqrt(ad + eps) / jnp.sqrt(ag + eps),
+            grads, acc_g, state["acc_d"])
+        acc_d = jax.tree.map(lambda a, d: rho * a + (1 - rho) * d * d,
+                             state["acc_d"], deltas)
+        return deltas, {"acc_g": acc_g, "acc_d": acc_d}
+
+    return Optimizer(init, update)
+
+
+_REGISTRY: dict[str, Callable[..., Optimizer]] = {
+    "gd": sgd, "sgd": sgd, "momentum": momentum, "adam": adam,
+    "adamw": lambda lr, **kw: adam(lr, weight_decay=kw.pop("weight_decay", 0.1), **kw),
+    "adagrad": adagrad, "adadelta": adadelta,
+}
+
+
+def make(name: str, lr: float, **kwargs) -> Optimizer:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}; have {list(_REGISTRY)}")
+    return _REGISTRY[name](lr, **kwargs)

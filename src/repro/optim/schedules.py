@@ -1,0 +1,42 @@
+"""Learning-rate schedules (pure functions step -> scale factor)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.asarray(1.0)
+
+
+def linear_warmup(warmup_steps: int):
+    def fn(step):
+        return jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_decay(total_steps: int, warmup_steps: int = 0,
+                 final_scale: float = 0.1):
+    """Linear warmup then cosine decay to final_scale."""
+    def fn(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        t = jnp.clip((step - warmup_steps) /
+                     max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_scale + (1 - final_scale) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return warm * cos
+    return fn
+
+
+def make(name: str, total_steps: int, warmup_steps: int = 0):
+    if name == "constant":
+        return constant()
+    if name == "warmup":
+        return linear_warmup(warmup_steps)
+    if name == "cosine":
+        return cosine_decay(total_steps, warmup_steps)
+    raise KeyError(f"unknown schedule {name!r}")
+
+
+def scale_updates(updates, scale):
+    import jax
+    return jax.tree.map(lambda u: u * scale.astype(u.dtype)
+                        if hasattr(u, "dtype") else u, updates)

@@ -1,0 +1,2 @@
+from repro.sharding.partition import (  # noqa: F401
+    batch_specs, cache_specs, param_specs)

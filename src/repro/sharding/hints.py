@@ -1,0 +1,157 @@
+"""Activation-sharding hints (the §Perf optimizations).
+
+The baseline relies on XLA SPMD propagation from the parameter shardings.
+That leaves two expensive reshardings in the lowered HLO (EXPERIMENTS.md
+§Perf):
+
+  1. attention: when num_heads % model_axis != 0, the (B,S,H*hd) ->
+     (B,S,H,hd) reshape breaks propagation and XLA moves the quadratic
+     score buffers through 'model'-axis collectives.  Hint: shard the
+     *query sequence* over 'model' (context parallelism) — scores become
+     local; only the small GQA K/V is gathered.
+  2. when heads divide evenly, pin head sharding explicitly so the scores
+     never leave their shard.
+
+Enabled via ``with sharding_hints(mesh):`` (the optimized dry-run path and
+launchers); a no-op when inactive, so model code stays backend-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh: Mesh, moe_a2a: bool = False):
+    """``moe_a2a`` additionally routes MoE FFNs through the explicit
+    expert-parallel all-to-all dispatch (models/moe.py::apply_moe_a2a)."""
+    prev = getattr(_state, "mesh", None)
+    prev_a2a = getattr(_state, "moe_a2a", False)
+    _state.mesh = mesh
+    _state.moe_a2a = moe_a2a
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+        _state.moe_a2a = prev_a2a
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def moe_a2a_enabled() -> bool:
+    return bool(getattr(_state, "moe_a2a", False))
+
+
+def _manual_axes() -> frozenset:
+    """Mesh axes that are Manual in the current trace (inside shard_map):
+    with_sharding_constraint may not mention them."""
+    try:
+        import jax.sharding as jsh
+        am = jsh.get_abstract_mesh()
+        return frozenset(
+            n for n, t in zip(getattr(am, "axis_names", ()),
+                              getattr(am, "axis_types", ()))
+            if t == jsh.AxisType.Manual)
+    except Exception:
+        return frozenset()
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    manual = _manual_axes()
+    return tuple(a for a in mesh.axis_names
+                 if a in ("pod", "data") and a not in manual)
+
+
+def hint_qkv(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Constrain attention activations (B, S, H, hd) before the score
+    matmul.  Head sharding when H divides the model axis; otherwise
+    sequence (context) parallelism on the query."""
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.axis_names \
+            or "model" in _manual_axes():
+        return q, k, v
+    msz = mesh.shape["model"]
+    dp = _dp_axes(mesh)
+    bq = dp if dp and _div(q.shape[0], mesh, dp) else None
+
+    def wsc(x, spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    if q.shape[2] % msz == 0 and k.shape[2] % msz == 0:
+        q = wsc(q, P(bq, None, "model", None))
+        k = wsc(k, P(bq, None, "model", None))
+        v = wsc(v, P(bq, None, "model", None))
+    elif q.shape[1] % msz == 0:
+        # context parallelism: q rows sharded; k/v replicated over 'model'
+        q = wsc(q, P(bq, "model", None, None))
+        k = wsc(k, P(bq, None, None, None))
+        v = wsc(v, P(bq, None, None, None))
+    return q, k, v
+
+
+def hint_residual(x: jax.Array):
+    """Sequence-parallel residual stream (Korthikanti et al.): (B, S, D)
+    batch over the data axes and sequence over 'model' between blocks —
+    norms/elementwise run 1/nm-sharded, and the layout matches both the
+    context-parallel attention queries and the token-split MoE dispatch
+    (no boundary resharding)."""
+    mesh = active_mesh()
+    if mesh is None or x.ndim != 3:
+        return x
+    manual = _manual_axes()
+    dp = _dp_axes(mesh)
+    bspec = dp if dp and _div(x.shape[0], mesh, dp) else None
+    seq = "model" if ("model" in mesh.axis_names
+                      and "model" not in manual
+                      and x.shape[1] % mesh.shape["model"] == 0) else None
+    if bspec is None and seq is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bspec, seq, None)))
+
+
+def hint_moe_buffers(buf_in: jax.Array, buf_out: jax.Array):
+    """Expert-parallel MoE: pin the (E·C, D) dispatch/return buffers to the
+    'model' (expert) axis so the scatter lowers to an all-to-all instead of
+    a replicated scatter + all-reduce."""
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.axis_names \
+            or "model" in _manual_axes():
+        return buf_in, buf_out
+    msz = mesh.shape["model"]
+    if buf_in.shape[0] % msz or buf_out.shape[0] % msz:
+        return buf_in, buf_out
+
+    def wsc(x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P("model", *([None] * (x.ndim - 1)))))
+
+    return wsc(buf_in), wsc(buf_out)
+
+
+def hint_tokens(x: jax.Array):
+    """Keep flattened token activations (T, D) sharded over the data axes."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    dp = _dp_axes(mesh)
+    if not dp or not _div(x.shape[0], mesh, dp):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))))
+
+
+def _div(dim: int, mesh, axes) -> bool:
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return total > 0 and dim % total == 0 and dim >= total

@@ -1,0 +1,171 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpec pytrees.
+
+Strategy (standard 2D "megatron + FSDP" layout, expert-parallel MoE):
+
+  * batch/token dims        -> ('pod','data')  (all data axes)
+  * expert axis (E, ...)    -> 'model'   (expert parallelism)
+  * embedding vocab dim     -> 'model'
+  * weight matrices         -> output-feature dim over 'model'; with FSDP
+    (params > fsdp_threshold) the input-feature dim additionally over 'data'
+  * stacked layer dim (leading, under 'stack') -> never sharded here (the
+    layerwise-ADMM trainer shards it over 'model' itself — see
+    core/layerwise.py)
+  * norms / biases / scalars -> replicated
+
+Axis assignments are applied only when the dim divides evenly; otherwise the
+dim stays unsharded (XLA would pad — we prefer predictable layouts).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP_THRESHOLD = 8e9    # params; above this, shard input dims over 'data'
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def _assign(shape, wants, mesh):
+    """wants: list of (dim_idx, axis_name) in priority order; returns a
+    PartitionSpec assigning each axis at most once, only if it divides."""
+    spec: list[Optional[str]] = [None] * len(shape)
+    used: set[str] = set()
+    for dim, axis in wants:
+        if axis in used or axis not in mesh.axis_names:
+            continue
+        if dim < len(shape) and shape[dim] % _axis_size(mesh, axis) == 0 \
+                and spec[dim] is None and shape[dim] > 1:
+            spec[dim] = axis
+            used.add(axis)
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shapes: Any) -> Any:
+    """params_shapes: pytree of ShapeDtypeStruct (or arrays)."""
+    fsdp = cfg.param_count() > FSDP_THRESHOLD
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        stacked = "stack/" in name or name.startswith("stack")
+        off = 1 if stacked else 0        # leading layer-stack dim
+
+        if nd - off <= 1:                # norms, biases, scalars, lam
+            return P(*([None] * nd))
+
+        # embedding: (V, D) table / (D, V) unembed
+        if "embedding" in name:
+            if "table" in name:
+                wants = [(0, "model")] + ([(1, "data")] if fsdp else [])
+            else:
+                wants = [(1, "model")] + ([(0, "data")] if fsdp else [])
+            return _assign(shape, wants, mesh)
+
+        # MoE experts: (L, E, d, f) -> E over model, d over data (fsdp)
+        if any(k in name for k in ("w_gate", "w_up", "w_down")) \
+                and nd - off == 3:
+            wants = [(off, "model")] + ([(off + 1, "data")] if fsdp else [])
+            return _assign(shape, wants, mesh)
+        if "router" in name:
+            return P(*([None] * nd))
+
+        # RG-LRU block-diagonal gates (L, NB, bs, bs): replicate (small)
+        if "gate_a" in name or "gate_x" in name:
+            return P(*([None] * nd))
+        # depthwise conv (L, k, W): shard channel dim over model
+        if "/conv/" in name or name.endswith("conv/w") or "conv/b" in name:
+            wants = [(nd - 1, "model")]
+            return _assign(shape, wants, mesh)
+
+        # generic 2D weight (L, in, out): output dim over 'model',
+        # input dim over 'data' under FSDP. "down"/"out"/"o" projections
+        # have their *input* as the parallel dim -> flip so the contraction
+        # stays local after the up-projection sharding.
+        is_reduce_in = any(name.endswith(s) or f"/{s}" in name.split("/")[-1]
+                           for s in ("down", "out", "o", "out_proj"))
+        if nd - off == 2:
+            if is_reduce_in:
+                wants = [(off, "model")] + ([(off + 1, "data")] if fsdp else [])
+            else:
+                wants = [(off + 1, "model")] + ([(off, "data")] if fsdp else [])
+            return _assign(shape, wants, mesh)
+
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh, params_shapes: Any,
+                    opt_shapes: Any) -> Any:
+    """Adam moments mirror param sharding; scalars replicated."""
+    pspecs = param_specs(cfg, mesh, params_shapes)
+
+    if isinstance(opt_shapes, dict) and "m" in opt_shapes:
+        return {"m": pspecs, "v": pspecs,
+                "t": P()}
+    # stateless optimizers: ()
+    return jax.tree.map(lambda _: P(), opt_shapes)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_shapes: Any) -> Any:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        b = shape[0]
+        total_dp = int(np.prod([_axis_size(mesh, a) for a in dp]))
+        spec: list = [None] * len(shape)
+        if b % total_dp == 0 and b >= total_dp:
+            spec[0] = dp
+        elif b % _axis_size(mesh, "data") == 0 and b >= _axis_size(mesh, "data"):
+            spec[0] = "data"
+        # embeddings inputs (B, S, D): D over model
+        if len(shape) == 3 and shape[-1] == cfg.d_model:
+            spec[-1] = None
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shapes: Any) -> Any:
+    """Decode caches: (L, B, S, H, hd) etc.  Batch over data axes when it
+    divides; otherwise (B=1 long-context) shard the sequence/window dim over
+    'data'; heads/state dims over 'model' when divisible."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total_dp = int(np.prod([_axis_size(mesh, a) for a in dp]))
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if nd <= 1:
+            return P(*([None] * nd))
+        spec: list = [None] * nd
+        # dim 0 is the stacked layer dim; dim 1 the batch
+        if nd >= 2 and shape[1] % total_dp == 0 and shape[1] >= total_dp:
+            spec[1] = dp
+        elif nd >= 3 and shape[1] == 1:
+            # B=1: sequence parallelism over 'data'
+            if shape[2] % _axis_size(mesh, "data") == 0 and shape[2] > 1:
+                spec[2] = "data"
+        # heads / channel dims over 'model' (k/v: dim 3; ssm h: dim 2)
+        for d in range(nd - 1, 1, -1):
+            if spec[d] is None and shape[d] % _axis_size(mesh, "model") == 0 \
+                    and shape[d] >= _axis_size(mesh, "model") and d != 2:
+                spec[d] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)

@@ -1,0 +1,1 @@
+from repro.util.compat import shard_map  # noqa: F401

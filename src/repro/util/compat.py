@@ -1,0 +1,34 @@
+"""Version-compat shims (jax.shard_map moved out of experimental in 0.8)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, names, devices=None):
+    """jax.make_mesh with explicit Auto axis types (silences the 0.9
+    default-change warning; we rely on Auto sharding propagation)."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, names,
+                             axis_types=(AxisType.Auto,) * len(names),
+                             devices=devices)
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, names, devices=devices)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False,
+              axis_names=None):
+    """jax.shard_map across jax versions (check_vma vs check_rep naming).
+
+    ``axis_names``: mesh axes the body is MANUAL over (others stay auto —
+    partial-manual mode, used by the deferred-grad-reduction train step)."""
+    kwargs = {}
+    if axis_names is not None:
+        kwargs["axis_names"] = frozenset(axis_names)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_rep,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep, **kwargs)

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned family,
+one forward + one train step + one decode step on CPU; asserts shapes and
+finiteness. The FULL configs are exercised via the dry-run only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import InputShape
+from repro.models.build import make_model
+
+SMOKE_SHAPE = InputShape("smoke", seq_len=64, global_batch=2, step="train")
+
+
+def _smoke_batch(model, key):
+    cfg = model.cfg
+    b, s = 2, 64
+    rng = np.random.default_rng(0)
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": jnp.asarray(rng.normal(size=(b, 32, cfg.d_model))
+                                  .astype(np.float32)),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s))
+                                  .astype(np.int32)),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s))
+                                   .astype(np.int32)),
+        }
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s))
+                              .astype(np.int32)),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s))
+                               .astype(np.int32)),
+    }
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(b, 16, cfg.d_model)).astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    assert cfg.d_model <= 512 and cfg.num_layers <= 5
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _smoke_batch(model, jax.random.key(1))
+
+    logits, aux, _ = jax.jit(model.forward)(params, batch)
+    expect_s = batch["tokens"].shape[1]
+    assert logits.shape == (2, expect_s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    opt_state = model.init_optimizer().init(params)
+    params2, opt_state, metrics = jax.jit(model.train_step)(
+        params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda acc, pair: acc or bool(pair),
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, params2),
+        False)
+    assert moved
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_decode_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    caches = model.init_cache(2, 32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+    logits, caches = step(params, caches, tok)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    logits2, caches = step(params, caches, tok + 1)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    # cache position advanced where applicable
+    flat = jax.tree_util.tree_leaves_with_path(caches)
+    pos_leaves = [l for p, l in flat
+                  if any(getattr(k, "key", None) == "pos" for k in p)]
+    for leaf in pos_leaves:
+        assert int(np.asarray(leaf).max()) == 2
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "qwen2-7b", "mamba2-1.3b",
+                                  "recurrentgemma-9b"])
+def test_rolling_decode(arch):
+    """Sliding-window (rolling) decode used by long_500k."""
+    import dataclasses
+    cfg = get_config(arch, reduced=True)
+    if cfg.arch_type not in ("ssm", "hybrid"):
+        cfg = dataclasses.replace(cfg, sliding_window=16)
+    model = make_model(cfg)
+    params = model.init(jax.random.key(0))
+    caches = model.init_cache(1, 64, rolling=True)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t, rolling=True))
+    for _ in range(3):
+        logits, caches = step(params, caches, tok)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_param_counts_match_scale():
+    """Full configs' analytic param counts are in the advertised ballpark."""
+    expect = {
+        "deepseek-v3-671b": (550e9, 800e9),
+        "nemotron-4-15b": (12e9, 19e9),
+        "deepseek-moe-16b": (13e9, 20e9),
+        # assigned spec says 48L (Moonlight card is 27L) -> ~28B total;
+        # we follow the assigned numbers exactly
+        "moonshot-v1-16b-a3b": (25e9, 32e9),
+        "qwen2-7b": (6e9, 9e9),
+        "gemma-2b": (1.5e9, 3.5e9),
+        "mamba2-1.3b": (1.0e9, 2.0e9),
+        "recurrentgemma-9b": (7e9, 12e9),
+        "internvl2-2b": (1.5e9, 3e9),
+        "seamless-m4t-medium": (0.8e9, 2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_active_params_moe():
+    cfg = get_config("deepseek-v3-671b")
+    active = cfg.active_param_count()
+    total = cfg.param_count()
+    assert active < 0.12 * total          # ~37B active of 671B

@@ -1,0 +1,76 @@
+"""Partitioner + community layout unit tests."""
+import numpy as np
+import pytest
+
+from repro.core import graph
+
+
+@pytest.fixture(scope="module")
+def g():
+    return graph.synthetic_sbm("amazon_photo_mini", seed=1)
+
+
+def test_normalized_adjacency_symmetric_and_scaled(g):
+    a = graph.normalized_adjacency(g.num_nodes, g.edges)
+    assert np.allclose(a, a.T, atol=1e-6)
+    # eigenvalues of (D+I)^{-1/2}(A+I)(D+I)^{-1/2} lie in [-1, 1]
+    row_sums = np.abs(a).sum(axis=1)
+    assert row_sums.max() <= np.sqrt(g.num_nodes)  # loose sanity
+    # self-loop entries present
+    assert (np.diag(a) > 0).all()
+
+
+def test_partition_balanced_and_complete(g):
+    m = 4
+    part = graph.partition_graph(g.num_nodes, g.edges, m, seed=0)
+    assert part.min() == 0 and part.max() == m - 1
+    sizes = np.bincount(part, minlength=m)
+    cap = int(np.ceil(g.num_nodes / m))
+    assert (sizes <= cap).all() and (sizes > 0).all()
+
+
+def test_partition_beats_random_cut(g):
+    m = 3
+    part = graph.partition_graph(g.num_nodes, g.edges, m, seed=0)
+    rng = np.random.default_rng(0)
+    rand = rng.integers(0, m, g.num_nodes)
+    assert graph.edge_cut(g.edges, part) < graph.edge_cut(g.edges, rand)
+
+
+def test_layout_blocks_reassemble_full_adjacency(g):
+    m = 3
+    part = graph.partition_graph(g.num_nodes, g.edges, m, seed=0)
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part)
+    a_full = graph.normalized_adjacency(g.num_nodes, g.edges)
+    # blocked SpMM == dense SpMM on a random feature matrix
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(g.num_nodes, 13)).astype(np.float32)
+    x_blk = layout.pack(x)                        # (M, n_pad, 13)
+    out_blk = np.einsum("mrip,rpc->mic", layout.a_blocks, x_blk)
+    out = layout.unpack(out_blk)
+    assert np.allclose(out, a_full @ x, atol=1e-4)
+
+
+def test_layout_pack_unpack_roundtrip(g):
+    part = graph.partition_graph(g.num_nodes, g.edges, 3, seed=0)
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part)
+    x = np.arange(g.num_nodes, dtype=np.float32)[:, None]
+    assert np.array_equal(layout.unpack(layout.pack(x)), x)
+
+
+def test_neighbor_mask_matches_blocks(g):
+    part = graph.partition_graph(g.num_nodes, g.edges, 3, seed=0)
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part)
+    nonzero = np.abs(layout.a_blocks).sum(axis=(2, 3)) > 0
+    assert (layout.neighbor_mask >= nonzero).all()
+
+
+def test_sbm_statistics():
+    g = graph.synthetic_sbm("amazon_photo_mini", seed=0)
+    n, n_train, n_test, k, c0, _ = graph.DATASET_STATS["amazon_photo_mini"]
+    assert g.num_nodes == n
+    assert g.features.shape == (n, c0)
+    assert int(g.train_mask.sum()) == n_train
+    assert int(g.test_mask.sum()) == n_test
+    assert not (g.train_mask & g.test_mask).any()
+    assert g.num_classes == k

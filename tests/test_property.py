@@ -1,0 +1,138 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gcn, graph, messages
+from repro.core.subproblems import ADMMConfig, backtracking_step
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _random_graph(n, extra_edges, seed):
+    rng = np.random.default_rng(seed)
+    # spanning-ish chain + random extras => connected-ish, no self loops
+    chain = np.stack([np.arange(n - 1), np.arange(1, n)], 1)
+    extra = rng.integers(0, n, size=(extra_edges, 2))
+    extra = extra[extra[:, 0] != extra[:, 1]]
+    return np.unique(np.sort(np.concatenate([chain, extra]), axis=1), axis=0)
+
+
+@given(n=st.integers(8, 60), extra=st.integers(0, 120),
+       seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_normalized_adjacency_spectral_bound(n, extra, seed):
+    """Eigenvalues of Ã = (D+I)^-1/2 (A+I) (D+I)^-1/2 lie in [-1, 1]."""
+    edges = _random_graph(n, extra, seed)
+    a = graph.normalized_adjacency(n, edges.astype(np.int32))
+    eig = np.linalg.eigvalsh(a)
+    assert eig.min() >= -1.0 - 1e-4 and eig.max() <= 1.0 + 1e-4
+
+
+@given(n=st.integers(12, 60), extra=st.integers(0, 100),
+       m=st.integers(2, 5), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_partition_is_a_partition(n, extra, m, seed):
+    edges = _random_graph(n, extra, seed).astype(np.int32)
+    part = graph.partition_graph(n, edges, m, seed=seed)
+    assert part.shape == (n,)
+    assert part.min() >= 0 and part.max() < m
+    sizes = np.bincount(part, minlength=m)
+    assert sizes.max() <= int(np.ceil(n / m)) + 1   # balance cap
+
+
+@given(n=st.integers(12, 48), extra=st.integers(5, 80),
+       m=st.integers(2, 4), c=st.integers(1, 9), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_blocked_spmm_equals_dense(n, extra, m, c, seed):
+    """Community-blocked aggregation == dense Ã @ X for any partition."""
+    edges = _random_graph(n, extra, seed).astype(np.int32)
+    part = graph.partition_graph(n, edges, m, seed=seed)
+    layout = graph.build_community_layout(n, edges, part)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, c)).astype(np.float32)
+    a = graph.normalized_adjacency(n, edges)
+    out_blocks = np.einsum("mrip,rpc->mic", layout.a_blocks, layout.pack(x))
+    np.testing.assert_allclose(layout.unpack(out_blocks), a @ x,
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_backtracking_never_increases_objective(seed):
+    """Quadratic-approx step with accepted τ never increases a convex obj."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(12, 12)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(12, 3)).astype(np.float32))
+
+    def obj(x):
+        r = a @ x - b
+        return jnp.vdot(r, r).real
+
+    x0 = jnp.asarray(rng.normal(size=(12, 3)).astype(np.float32))
+    x1, tau = backtracking_step(obj, x0, jnp.asarray(1.0), ADMMConfig())
+    assert float(obj(x1)) <= float(obj(x0)) * (1 + 1e-5)
+    assert float(tau) > 0
+
+
+@given(m=st.integers(2, 4), n_pad=st.sampled_from([16, 24]),
+       c=st.integers(2, 8), seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_relay_identity(m, n_pad, c, seed):
+    """q_r − Ã_{r,me} Z_me W == Σ_{r'≠me} Ã_{r,r'} Z_r' W (eq. 4) for random
+    symmetric block matrices."""
+    rng = np.random.default_rng(seed)
+    blocks = rng.normal(size=(m, m, n_pad, n_pad)).astype(np.float32)
+    blocks = (blocks + blocks.transpose(1, 0, 3, 2)) / 2   # symmetric Ã
+    z = jnp.asarray(rng.normal(size=(m, n_pad, c)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(c, c)).astype(np.float32))
+    a = jnp.asarray(blocks)
+    me = 0
+    q_all = jnp.stack([messages.relay_aggregate(a[r], z, w)
+                       for r in range(m)])
+    s2 = messages.second_order_from_relay(q_all, a[me], z[me], w)
+    for r in range(m):
+        expect = sum(blocks[r, rp] @ np.asarray(z[rp])
+                     for rp in range(m) if rp != me) @ np.asarray(w)
+        np.testing.assert_allclose(np.asarray(s2[r]), expect,
+                                   rtol=3e-3, atol=3e-3)
+
+
+@given(b=st.integers(1, 3), s=st.sampled_from([16, 32]),
+       seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(b, s, seed):
+    """Rotary embedding is an isometry per (head, position)."""
+    from repro.models.layers import apply_rope
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, s, 2, 16)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=2e-4, atol=2e-4)
+
+
+@given(t=st.sampled_from([32, 64]), e=st.sampled_from([4, 8]),
+       k=st.integers(1, 3), seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_moe_rank_unique_within_expert(t, e, k, seed):
+    """The sort-based dispatch rank is a bijection into capacity slots:
+    kept (token, slot) pairs of one expert get distinct ranks."""
+    rng = np.random.default_rng(seed)
+    flat_expert = jnp.asarray(rng.integers(0, e, t * k).astype(np.int32))
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    sorted_experts = flat_expert[sort_idx]
+    idx = jnp.arange(t * k, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_experts[1:] != sorted_experts[:-1]])
+    group_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    rank_sorted = idx - group_start
+    rank = np.zeros(t * k, np.int32)
+    rank[np.asarray(sort_idx)] = np.asarray(rank_sorted)
+    for ex in range(e):
+        ranks = rank[np.asarray(flat_expert) == ex]
+        assert len(set(ranks.tolist())) == len(ranks)
+        if len(ranks):
+            assert sorted(ranks.tolist()) == list(range(len(ranks)))
