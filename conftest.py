@@ -1,0 +1,6 @@
+"""Repo-level pytest bootstrap: make ``import repro`` work from a bare
+``pytest`` invocation (the package lives under src/, no install step)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))

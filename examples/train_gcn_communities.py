@@ -45,6 +45,11 @@ def main():
                                   seed=0, comm_bf16=args.comm_bf16)
     print(f"mesh: {dict(trainer.mesh.shape)}; neighbour topology:\n"
           f"{np.asarray(trainer.data.neighbor_mask).astype(int)}")
+    cs = trainer.comm_stats
+    print(f"collective/iter: full {cs['full_bytes'] / 1e6:.2f} MB, "
+          f"neighbour-only {cs['needed_bytes'] / 1e6:.2f} MB "
+          f"({cs['nnz_blocks']}/{cs['dense_blocks']} blocks, "
+          f"{100 * cs['savings_ratio']:.0f}% saved)")
 
     log = trainer.train(args.epochs, verbose=False)
     stride = max(1, args.epochs // 10)

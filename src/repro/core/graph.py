@@ -120,13 +120,99 @@ def edge_cut(edges: Array, part: Array) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class BlockCSR:
+    """Block-compressed Ã: only the nnz present Ã_{m,r} blocks are stored.
+
+    Memory is O(nnz · n_pad²) instead of the dense layout's O(M² · n_pad²);
+    on a power-law community graph nnz grows ~linearly in M while M² does
+    not.  Two views of the same blocks:
+
+      * CSR-of-blocks (``indptr``/``indices``/``blocks``) — host-side
+        compression, variable fan-in per row;
+      * ELL (``ell_indices``/``ell_mask`` into ``ell_blocks``) — every row
+        padded to the max fan-in ``max_deg``, fixed-shape and therefore the
+        jit/vmap-friendly form the aggregation kernels consume.
+    """
+
+    num_parts: int
+    n_pad: int
+    indptr: Array       # (M+1,) int32 — row m's blocks are [indptr[m], indptr[m+1])
+    indices: Array      # (nnz,) int32 — source community of each stored block
+    blocks: Array       # (nnz, n_pad, n_pad) float32
+    ell_indices: Array  # (M, max_deg) int32 (rows padded with index 0)
+    ell_mask: Array     # (M, max_deg) float32 (1 = real block, 0 = pad)
+    ell_blocks: Array   # (M, max_deg, n_pad, n_pad) float32
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def max_deg(self) -> int:
+        return int(self.ell_indices.shape[1])
+
+    def to_dense(self) -> Array:
+        """Reconstruct the dense (M, M, n_pad, n_pad) block tensor."""
+        m, n = self.num_parts, self.n_pad
+        out = np.zeros((m, m, n, n), dtype=np.float32)
+        for row in range(m):
+            lo, hi = int(self.indptr[row]), int(self.indptr[row + 1])
+            for k in range(lo, hi):
+                out[row, int(self.indices[k])] = self.blocks[k]
+        return out
+
+    def spmm(self, z_all: Array) -> Array:
+        """Σ_{r∈N_m} Ã_{m,r} Z_r via the ELL view — O(nnz·n_pad²·C) FLOPs.
+
+        z_all: (M, n_pad, C) -> (M, n_pad, C).  Host-side (numpy) twin of
+        kernels.ops.community_spmm_ell — keep the two contractions in sync.
+        """
+        z_g = z_all[self.ell_indices]                # (M, max_deg, n_pad, C)
+        z_g = z_g * self.ell_mask[..., None, None]
+        return np.einsum("mdip,mdpc->mic", self.ell_blocks, z_g)
+
+
+def compress_blocks(a_blocks: Array, neighbor_mask: Array) -> BlockCSR:
+    """Build the CSR-of-blocks + ELL views from a dense block tensor."""
+    m, _, n_pad, _ = a_blocks.shape
+    nbr = np.asarray(neighbor_mask, bool)
+    indptr = np.zeros(m + 1, dtype=np.int32)
+    indices, blocks = [], []
+    for row in range(m):
+        cols = np.flatnonzero(nbr[row])
+        indptr[row + 1] = indptr[row] + len(cols)
+        indices.extend(int(c) for c in cols)
+        blocks.extend(a_blocks[row, c] for c in cols)
+    indices = np.asarray(indices, dtype=np.int32)
+    blocks = np.stack(blocks).astype(np.float32) if blocks else \
+        np.zeros((0, n_pad, n_pad), np.float32)
+
+    deg = np.diff(indptr)
+    max_deg = int(deg.max()) if m else 0
+    ell_indices = np.zeros((m, max_deg), dtype=np.int32)
+    ell_mask = np.zeros((m, max_deg), dtype=np.float32)
+    ell_blocks = np.zeros((m, max_deg, n_pad, n_pad), dtype=np.float32)
+    for row in range(m):
+        lo, hi = int(indptr[row]), int(indptr[row + 1])
+        d = hi - lo
+        ell_indices[row, :d] = indices[lo:hi]
+        ell_mask[row, :d] = 1.0
+        ell_blocks[row, :d] = blocks[lo:hi]
+    return BlockCSR(num_parts=m, n_pad=n_pad, indptr=indptr, indices=indices,
+                    blocks=blocks, ell_indices=ell_indices, ell_mask=ell_mask,
+                    ell_blocks=ell_blocks)
+
+
+@dataclasses.dataclass(frozen=True)
 class CommunityLayout:
     """Community-blocked layout of a graph (paper §2, Fig. 1).
 
     Nodes are permuted so community m occupies rows [m*n_pad, m*n_pad+n_m);
     every community is padded to ``n_pad``. ``a_blocks[m, r]`` is the dense
     Ã_{m,r} block; ``neighbor_mask[m, r]`` marks r ∈ N_m ∪ {m} (nonzero
-    blocks) — the paper's first-order communication topology.
+    blocks) — the paper's first-order communication topology.  When built
+    with ``compressed=True``, ``block_csr`` additionally stores only the
+    present blocks (CSR-of-blocks / ELL; O(nnz·n_pad²) memory).
     """
 
     num_parts: int
@@ -136,6 +222,18 @@ class CommunityLayout:
     node_mask: Array       # (M, n_pad) bool  (True = real node)
     neighbor_mask: Array   # (M, M) bool
     sizes: Array           # (M,) int
+    block_csr: "BlockCSR | None" = None
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int(np.asarray(self.neighbor_mask).sum())
+
+    def compress(self) -> BlockCSR:
+        """CSR-of-blocks view of ``a_blocks`` (cached when built with
+        ``compressed=True``)."""
+        if self.block_csr is not None:
+            return self.block_csr
+        return compress_blocks(self.a_blocks, self.neighbor_mask)
 
     def pack(self, x: Array, fill: float = 0.0) -> Array:
         """(N, ...) node array -> (M, n_pad, ...) community-blocked array."""
@@ -156,7 +254,8 @@ class CommunityLayout:
 
 
 def build_community_layout(num_nodes: int, edges: Array, part: Array,
-                           pad_to: int | None = None) -> CommunityLayout:
+                           pad_to: int | None = None,
+                           compressed: bool = False) -> CommunityLayout:
     num_parts = int(part.max()) + 1
     sizes = np.bincount(part, minlength=num_parts)
     n_pad = int(sizes.max()) if pad_to is None else int(pad_to)
@@ -180,10 +279,12 @@ def build_community_layout(num_nodes: int, edges: Array, part: Array,
     node_mask = (perm >= 0).reshape(num_parts, n_pad)
     neighbor_mask = (np.abs(a_blocks).sum(axis=(2, 3)) > 0)
     np.fill_diagonal(neighbor_mask, True)
+    a_blocks = a_blocks.astype(np.float32)
+    csr = compress_blocks(a_blocks, neighbor_mask) if compressed else None
     return CommunityLayout(num_parts=num_parts, n_pad=n_pad, perm=perm,
-                           a_blocks=a_blocks.astype(np.float32),
+                           a_blocks=a_blocks,
                            node_mask=node_mask, neighbor_mask=neighbor_mask,
-                           sizes=sizes)
+                           sizes=sizes, block_csr=csr)
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +293,68 @@ def build_community_layout(num_nodes: int, edges: Array, part: Array,
 # train-test counts with a stochastic block model whose blocks align with the
 # label classes, so community structure (the paper's premise) is present.
 # ---------------------------------------------------------------------------
+
+def synthetic_powerlaw_communities(num_parts: int, nodes_per_part: int = 32,
+                                   attach: int = 2, p_in: float = 0.3,
+                                   inter_edges: int = 4, seed: int = 0,
+                                   num_classes: int = 4, feat_dim: int = 16
+                                   ) -> tuple[Graph, Array]:
+    """Graph of M dense communities whose *inter-community* topology is a
+    preferential-attachment (Barabási–Albert) graph: block fan-in follows a
+    power law, so nnz Ã blocks grows ~O(M·attach) while the dense layout is
+    O(M²) — the regime where block compression and neighbour-only
+    communication pay off.  Returns (graph, ground-truth partition).
+    """
+    rng = np.random.default_rng(seed)
+    m, n_c = num_parts, nodes_per_part
+    n = m * n_c
+    part = np.repeat(np.arange(m, dtype=np.int32), n_c)
+
+    edges: list[tuple[int, int]] = []
+    # dense intra-community structure (ER with p_in, plus a ring so every
+    # community is connected)
+    for c in range(m):
+        base = c * n_c
+        for i in range(n_c):
+            edges.append((base + i, base + (i + 1) % n_c))
+        pairs = np.argwhere(
+            np.triu(rng.random((n_c, n_c)) < p_in, k=2))
+        edges.extend((base + int(i), base + int(j)) for i, j in pairs)
+
+    # preferential attachment over communities
+    deg = np.ones(m)
+    com_edges: set[tuple[int, int]] = set()
+    for c in range(1, m):
+        k = min(attach, c)
+        probs = deg[:c] / deg[:c].sum()
+        targets = rng.choice(c, size=k, replace=False, p=probs)
+        for t in targets:
+            com_edges.add((min(c, int(t)), max(c, int(t))))
+            deg[c] += 1
+            deg[t] += 1
+    # each community edge becomes a few node-level bridge edges
+    for c1, c2 in sorted(com_edges):
+        for _ in range(inter_edges):
+            u = c1 * n_c + int(rng.integers(n_c))
+            v = c2 * n_c + int(rng.integers(n_c))
+            edges.append((u, v))
+
+    e = np.unique(np.sort(np.asarray(edges, dtype=np.int32), axis=1), axis=0)
+    e = e[e[:, 0] != e[:, 1]]
+
+    labels = (part % num_classes).astype(np.int32)
+    centers = rng.normal(0.0, 1.0, size=(num_classes, feat_dim))
+    feats = (centers[labels]
+             + rng.normal(0, 0.8, size=(n, feat_dim))).astype(np.float32)
+    order = rng.permutation(n)
+    train_mask = np.zeros(n, dtype=bool)
+    test_mask = np.zeros(n, dtype=bool)
+    train_mask[order[: n // 3]] = True
+    test_mask[order[n // 3: 2 * n // 3]] = True
+    return Graph(edges=e, features=feats, labels=labels,
+                 train_mask=train_mask, test_mask=test_mask,
+                 num_classes=num_classes), part
+
 
 DATASET_STATS = {
     # name: (nodes, train, test, classes, features, avg_degree)

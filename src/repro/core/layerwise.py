@@ -131,6 +131,12 @@ class LayerwiseADMMTrainer:
 
     def _apply_blocks(self, kind: str, stacked_w, inputs):
         """vmap a single block over the stacked layer axis: F_b(Z_{b-1})."""
+        if inputs.shape[0] == 0:
+            # empty block stack (e.g. the within-segment coupling of a
+            # single-block segment) — vmap over a size-0 axis crashes some
+            # batching rules (lax.top_k in the MoE router), so short-circuit
+            return jnp.zeros_like(inputs)
+
         def one(w, x):
             out, _ = transformer.apply_layer(self.cfg, kind, w, x)
             return out
@@ -227,23 +233,25 @@ class LayerwiseADMMTrainer:
             targets_blocks = self._apply_blocks(seg.kind, w_new, inputs)
             is_last_seg = seg.kind == last_kind
 
-            # next-block coupling: F_{b+1}(Z_b) vs Z_{b+1}^k — the "next"
-            # of the final block of segment si is the first block of si+1
-            if is_last_seg:
-                next_w = jax.tree.map(lambda l: l[1:], w_new)
-                next_kind = seg.kind
-                z_next_ref = zsk[1:]
-            else:
+            # cross-segment coupling: the last block of segment si feeds the
+            # FIRST block of segment si+1 — F_{si+1,0}(Z_{si,last}) vs
+            # Z_{si+1,0}^k.  When that next block is the network's final
+            # block, this edge is the dualized constraint and carries the
+            # augmented-Lagrangian terms (otherwise the u update would have
+            # no consumer for single-block last segments).
+            if not is_last_seg:
                 nseg = segs[si + 1]
-                next_w = jax.tree.map(
-                    lambda a, b: jnp.concatenate([a[1:], b[:1]], 0),
-                    w_new, new_stack[nseg.kind]) \
-                    if nseg.kind == seg.kind else None
-                next_kind = seg.kind
-                z_next_ref = zsk[1:]
+                w_x0 = jax.tree.map(lambda l: l[0], new_stack[nseg.kind])
+                z_x_ref = state.zs[nseg.kind][0]
+                x_is_final = nseg.kind == last_kind and nseg.count == 1
+            else:
+                nseg = w_x0 = z_x_ref = None
+                x_is_final = False
 
             def z_obj(zsk_var, targets_blocks=targets_blocks, seg=seg,
-                      w_new=w_new, zsk=zsk, is_last=is_last_seg):
+                      w_new=w_new, zsk=zsk, is_last=is_last_seg,
+                      nseg=nseg, w_x0=w_x0, z_x_ref=z_x_ref,
+                      x_is_final=x_is_final):
                 r1 = (zsk_var - targets_blocks).astype(jnp.float32)
                 vals = 0.5 * admm.nu * jnp.sum(
                     r1 * r1, axis=tuple(range(1, r1.ndim)))
@@ -254,14 +262,23 @@ class LayerwiseADMMTrainer:
                 r2 = (zsk[1:] - pred_next).astype(jnp.float32)
                 v2 = 0.5 * admm.nu * jnp.sum(
                     r2 * r2, axis=tuple(range(1, r2.ndim)))
-                if is_last:
-                    r2_last = r2[-1] if v2.shape[0] else None
-                    if r2_last is not None:
-                        lin = jnp.sum(state.u * r2_last)
-                        quad = 0.5 * (admm.rho - admm.nu) * jnp.sum(
-                            r2_last * r2_last)
-                        v2 = v2.at[-1].add(lin + quad)
+                if is_last and v2.shape[0]:
+                    r2_last = r2[-1]
+                    lin = jnp.sum(state.u * r2_last)
+                    quad = 0.5 * (admm.rho - admm.nu) * jnp.sum(
+                        r2_last * r2_last)
+                    v2 = v2.at[-1].add(lin + quad)
                 vals = vals.at[:-1].add(v2)
+                # coupling across the segment boundary (last lane)
+                if nseg is not None:
+                    pred_x, _ = transformer.apply_layer(
+                        cfg, nseg.kind, w_x0, zsk_var[-1])
+                    r2x = (z_x_ref - pred_x).astype(jnp.float32)
+                    vx = 0.5 * admm.nu * jnp.sum(r2x * r2x)
+                    if x_is_final:
+                        vx = vx + jnp.sum(state.u * r2x) + \
+                            0.5 * (admm.rho - admm.nu) * jnp.sum(r2x * r2x)
+                    vals = vals.at[-1].add(vx)
                 # last block of last segment: CE readout term
                 if is_last:
                     ce = _next_token_ce(

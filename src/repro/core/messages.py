@@ -21,30 +21,65 @@ with the paper's literal per-neighbour message formulas.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
 
-def row_aggregate(a_row: Array, z_all: Array) -> Array:
-    """Σ_r Ã_{m,r} Z_r — community m's first-order aggregation.
+def row_aggregate(a_row: Array, z_all: Array,
+                  mask: Array | None = None) -> Array:
+    """Σ_{r∈N_m} Ã_{m,r} Z_r — community m's first-order aggregation.
 
     a_row: (M, n_pad, n_pad) — m's row of Ã blocks (Ã_{m,r} for all r)
     z_all: (M, n_pad, C)     — all communities' Z (gathered)
+    mask:  optional (M,) neighbour row; absent blocks contribute nothing
+           (the blocks are zero anyway — the mask makes the paper's
+           r ∈ N_m ∪ {m} restriction explicit and lets sparse backends skip)
     returns (n_pad, C)
     """
+    if mask is not None:
+        a_row = a_row * mask[:, None, None].astype(a_row.dtype)
     return jnp.einsum("rip,rpc->ic", a_row, z_all)
 
 
-def first_order_messages(a_row: Array, z_all: Array, w_next: Array) -> Array:
+def first_order_messages(a_row: Array, z_all: Array, w_next: Array,
+                         mask: Array | None = None) -> Array:
     """Stacked p_{l,r→m} for all r: (M, n_pad, C_next).  p[r] = Ã_{m,r} Z_r W."""
+    if mask is not None:
+        a_row = a_row * mask[:, None, None].astype(a_row.dtype)
     return jnp.einsum("rip,rpc->ric", a_row, z_all) @ w_next
 
 
-def relay_aggregate(a_row: Array, z_all: Array, w_next: Array) -> Array:
+def relay_aggregate(a_row: Array, z_all: Array, w_next: Array,
+                    mask: Array | None = None) -> Array:
     """q_{l,m} = (Σ_r Ã_{m,r} Z_r) W_{l+1} — the payload community m relays."""
-    return row_aggregate(a_row, z_all) @ w_next
+    return row_aggregate(a_row, z_all, mask) @ w_next
+
+
+def gather_bytes(neighbor_mask, n_pad: int, feature_dims: Sequence[int],
+                 itemsize: int = 4) -> dict:
+    """Collective bytes per ADMM iteration: full all-gather vs the
+    neighbour-only volume the paper's topology actually needs.
+
+    Every iteration gathers one (M, n_pad, C) payload per entry of
+    ``feature_dims`` (the Z_l layers, U, and the relay aggregates q).  The
+    full all-gather moves M payload rows to every agent; neighbour-aware
+    exchange moves only the rows r ∈ N_m ∪ {m}, i.e. nnz(neighbor_mask)
+    row-payloads in total instead of M².
+    """
+    nbr = np.asarray(neighbor_mask)
+    m = nbr.shape[0]
+    nnz = int(nbr.sum())
+    per_c = n_pad * itemsize
+    full = sum(m * m * c * per_c for c in feature_dims)
+    needed = sum(nnz * c * per_c for c in feature_dims)
+    return {"full_bytes": full, "needed_bytes": needed,
+            "nnz_blocks": nnz, "dense_blocks": m * m,
+            "savings_ratio": 1.0 - (needed / full if full else 0.0)}
 
 
 def second_order_from_relay(q_all: Array, a_row: Array, z_local: Array,

@@ -58,13 +58,28 @@ class CommunityData:
     test_mask: Array     # (M, n_pad) float32
     neighbor_mask: Array  # (M, M) bool
     denom: Array         # scalar — global labeled-node count
+    # block-compressed Ã (ELL view; graph.BlockCSR): device-resident
+    # (ell_blocks, ell_indices, ell_mask) when built with compressed=True,
+    # for kops.community_spmm_ell-based consumers (benchmarks, sparse
+    # backends).  NOTE: the shard_map trainer still aggregates from the
+    # dense a_blocks — requesting the ELL view *adds* its O(nnz·n_pad²)
+    # on top; the memory win comes from dropping a_blocks, which a dense
+    # replicated shard_map cannot do yet.
+    block_ell: "tuple[Array, Array, Array] | None" = None
 
     @property
     def num_parts(self) -> int:
         return int(self.a_blocks.shape[0])
 
 
-def community_data(g: graph.Graph, layout: graph.CommunityLayout) -> CommunityData:
+def community_data(g: graph.Graph, layout: graph.CommunityLayout,
+                   compressed: bool = False) -> CommunityData:
+    block_ell = None
+    if compressed or layout.block_csr is not None:
+        csr = layout.compress()
+        block_ell = (jnp.asarray(csr.ell_blocks),
+                     jnp.asarray(csr.ell_indices),
+                     jnp.asarray(csr.ell_mask))
     return CommunityData(
         a_blocks=jnp.asarray(layout.a_blocks),
         z0=jnp.asarray(layout.pack(g.features)),
@@ -73,6 +88,7 @@ def community_data(g: graph.Graph, layout: graph.CommunityLayout) -> CommunityDa
         test_mask=jnp.asarray(layout.pack(g.test_mask.astype(np.float32))),
         neighbor_mask=jnp.asarray(layout.neighbor_mask),
         denom=jnp.asarray(float(g.train_mask.sum())),
+        block_ell=block_ell,
     )
 
 
@@ -203,24 +219,39 @@ def fista_lanes(admm: ADMMConfig, b, u, labels, mask, z_init, denom):
 
 def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                     comm_bf16: bool,
-                    a_row, z0_loc, labels_loc, mask_loc, denom,
+                    a_row, nbr_row, z0_loc, labels_loc, mask_loc, denom,
                     ws, zs_loc, u_loc, taus, thetas):
-    """Shapes per shard: a_row (k,M,n,n); z*_loc (k,n,C); thetas[l] (k,)."""
+    """Shapes per shard: a_row (k,M,n,n); nbr_row (k,M); z*_loc (k,n,C);
+    thetas[l] (k,)."""
     f = gcn.activation_fn(cfg.activation)
     num_layers = cfg.num_layers
     m_total = a_row.shape[1]
+    nbrf = nbr_row.astype(jnp.float32)           # (k, M) 1/0 neighbour rows
+    # union of this shard's lanes' neighbourhoods: the only communities
+    # whose payload rows any local subproblem reads
+    shard_nbr = jnp.max(nbrf, axis=0)            # (M,)
 
     if use_kernel:
         from repro.kernels import ops as kops
 
         def rowagg(a, zh):
-            return kops.community_spmm(a, zh)
+            # per-lane neighbour rows engage the kernel's @pl.when block
+            # skipping: work ∝ nnz blocks, not M²
+            return kops.community_spmm(a, zh, nbr_row)
     else:
-        def rowagg(a, zh):                   # Σ_r Ã_{m,r} Z_r per lane
-            return jnp.einsum("kmip,mpc->kic", a, zh)
+        def rowagg(a, zh):                   # Σ_{r∈N_m} Ã_{m,r} Z_r per lane
+            return jnp.einsum("kmip,mpc->kic",
+                              a * nbrf[:, :, None, None], zh)
 
-    def gather(x_loc):
+    def gather(x_loc, neighbors_only: bool = True):
         """(k, n, C) local -> (M, n, C) global (community-major order).
+
+        ``neighbors_only`` masks the gathered payload down to the rows
+        r ∈ ∪_lanes N_m that this shard's subproblems actually read — the
+        paper's neighbour-only exchange.  (On an all-gather transport the
+        masking documents/verifies the needed volume; the recorded stats in
+        ``ParallelADMMTrainer.comm_stats`` quantify the byte savings a
+        point-to-point transport realizes.)
 
         With ``comm_bf16`` the paper's p/s message payloads travel in bf16
         (half the collective bytes; §Perf) and are restored to f32 for the
@@ -233,9 +264,13 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                 x_loc.astype(jnp.bfloat16), jnp.uint16)
             g = jax.lax.all_gather(wire, AXIS)
             g = jax.lax.bitcast_convert_type(g, jnp.bfloat16)
-            return g.reshape((m_total,) + x_loc.shape[1:]).astype(dt)
-        g = jax.lax.all_gather(x_loc, AXIS)  # (n_shards, k, n, C)
-        return g.reshape((m_total,) + x_loc.shape[1:])
+            g = g.reshape((m_total,) + x_loc.shape[1:]).astype(dt)
+        else:
+            g = jax.lax.all_gather(x_loc, AXIS)  # (n_shards, k, n, C)
+            g = g.reshape((m_total,) + x_loc.shape[1:])
+        if neighbors_only:
+            g = g * shard_nbr[:, None, None].astype(dt)
+        return g
 
     # gathered k-th iterates — one communication round per ADMM iteration
     zh = [gather(z) for z in zs_loc]            # Z_1..Z_L
@@ -275,6 +310,12 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
             delta = (z - z_ref) @ w_next                     # (k, n, C)
             return q_all[None] + jnp.einsum("kmnp,knc->kmpc", a_row, delta)
 
+        # neighbour weighting of the coupling terms: lane m's ψ only sums
+        # the communities r ∈ N_m ∪ {m} whose pre-activations depend on
+        # Z_m (paper eq. 5/6) — the r ∉ N_m residuals are constants in z
+        # (zero gradient) and are dropped from the objective
+        wt = nbrf[:, :, None, None]                          # (k, M, 1, 1)
+
         if l + 1 < num_layers:
             zh_next = zh[l]
 
@@ -282,7 +323,7 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                           zh_next=zh_next):
                 r1 = z - target1
                 v1 = 0.5 * admm.nu * jnp.sum(r1 * r1, axis=(1, 2))
-                r2 = zh_next[None] - f(pre_all(z))           # (k, M, n, C)
+                r2 = (zh_next[None] - f(pre_all(z))) * wt    # (k, M, n, C)
                 v2 = 0.5 * admm.nu * jnp.sum(r2 * r2, axis=(1, 2, 3))
                 return v1 + v2
         else:
@@ -292,7 +333,7 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                           zh_last=zh_last, uh=uh):
                 r1 = z - target1
                 v1 = 0.5 * admm.nu * jnp.sum(r1 * r1, axis=(1, 2))
-                r2 = zh_last[None] - pre_all(z)              # (k, M, n, C)
+                r2 = (zh_last[None] - pre_all(z)) * wt       # (k, M, n, C)
                 lin = jnp.sum(uh[None] * r2, axis=(1, 2, 3))
                 quad = 0.5 * admm.rho * jnp.sum(r2 * r2, axis=(1, 2, 3))
                 return v1 + lin + quad
@@ -328,12 +369,15 @@ class ParallelADMMTrainer:
 
     def __init__(self, cfg: gcn.GCNConfig, admm: ADMMConfig, g: graph.Graph,
                  num_parts: int, mesh: Mesh | None = None, seed: int = 0,
-                 use_kernel: bool = False, comm_bf16: bool = False):
+                 use_kernel: bool = False, comm_bf16: bool = False,
+                 compressed: bool = False, part: np.ndarray | None = None):
         self.cfg, self.admm, self.graph = cfg, admm, g
-        part = graph.partition_graph(g.num_nodes, g.edges, num_parts,
-                                     seed=seed)
-        self.layout = graph.build_community_layout(g.num_nodes, g.edges, part)
-        self.data = community_data(g, self.layout)
+        if part is None:
+            part = graph.partition_graph(g.num_nodes, g.edges, num_parts,
+                                         seed=seed)
+        self.layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                                   compressed=compressed)
+        self.data = community_data(g, self.layout, compressed=compressed)
         m = self.data.num_parts
 
         if mesh is None:
@@ -358,7 +402,7 @@ class ParallelADMMTrainer:
         sharded, rep = P(AXIS), P()
         n_l = cfg.num_layers
         body = partial(_iteration_body, cfg, admm, use_kernel, comm_bf16)
-        in_specs = (sharded, sharded, sharded, sharded, rep,
+        in_specs = (sharded, sharded, sharded, sharded, sharded, rep,
                     (rep,) * n_l, (sharded,) * n_l, sharded,
                     (rep,) * n_l, (sharded,) * n_l)
         out_specs = ((rep,) * n_l, (sharded,) * n_l, sharded,
@@ -369,12 +413,28 @@ class ParallelADMMTrainer:
         @jax.jit
         def step(state: ParallelState):
             ws, zs, u, taus, thetas = mapped(
-                self.data.a_blocks, self.data.z0, self.data.labels,
+                self.data.a_blocks, self.data.neighbor_mask,
+                self.data.z0, self.data.labels,
                 self.data.train_mask, self.data.denom,
                 state.weights, state.zs, state.u, state.taus, state.thetas)
             return ParallelState(ws, zs, u, taus, thetas)
 
         self._step = step
+
+        # collective volume per iteration: the gathers the body issues are
+        # one (M, n_pad, C) payload each for Z_0 input, Z_1..Z_L, the relay
+        # aggregates q (hidden layers), U, and the refreshed penultimate Z.
+        # A 1-layer net has no hidden Z loop: no q and no U gather.
+        dims = list(cfg.layer_dims)
+        gathered_cs = [dims[0]] + dims[1:]                # Z_0..Z_L
+        if cfg.num_layers >= 2:
+            gathered_cs += (dims[2:]                      # q per hidden layer
+                            + [dims[-1], dims[-2]])       # U, Z_{L-1} refresh
+        else:
+            gathered_cs += [dims[0]]                      # Z_0 refresh (dual)
+        self.comm_stats = messages.gather_bytes(
+            self.layout.neighbor_mask, self.layout.n_pad, gathered_cs,
+            itemsize=2 if comm_bf16 else 4)
 
         a_tilde = jnp.asarray(a_full)
         z0_full = jnp.asarray(g.features)
@@ -382,12 +442,14 @@ class ParallelADMMTrainer:
         tr_mask = jnp.asarray(g.train_mask, np.float32)
         te_mask = jnp.asarray(g.test_mask, np.float32)
         a_blocks = self.data.a_blocks
+        nbr_f = self.data.neighbor_mask.astype(jnp.float32)
 
         @jax.jit
         def metrics(state: ParallelState):
             logits = gcn.forward(cfg, a_tilde, z0_full, state.weights)[-1]
             z_pen = state.zs[-2] if cfg.num_layers >= 2 else self.data.z0
-            agg = jnp.einsum("mrip,rpc->mic", a_blocks, z_pen)
+            agg = jnp.einsum("mrip,rpc->mic",
+                             a_blocks * nbr_f[:, :, None, None], z_pen)
             res = state.zs[-1] - agg @ state.weights[-1]
             return (gcn.accuracy(logits, labels, tr_mask),
                     gcn.accuracy(logits, labels, te_mask),

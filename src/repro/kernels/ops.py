@@ -35,10 +35,15 @@ def community_spmm(a_row: jax.Array, z_all: jax.Array,
                    mask: jax.Array | None = None) -> jax.Array:
     """Σ_r Ã_{m,r} Z_r with block-sparse skipping.
 
-    a_row may carry a leading lane dim (k communities per shard)."""
+    a_row may carry a leading lane dim (k communities per shard); mask may
+    then be per-lane (k, M) — each lane skips its own absent blocks — or a
+    shared (M,) row."""
     if mask is None:
         mask = jnp.ones((a_row.shape[-3],), jnp.int32)
     if a_row.ndim == 4:      # lanes: vmap the kernel
+        if mask.ndim == 2:   # per-lane neighbour rows
+            fn = jax.vmap(lambda a, mk: community_spmm(a, z_all, mk))
+            return fn(a_row, mask)
         fn = jax.vmap(lambda a: community_spmm(a, z_all, mask))
         return fn(a_row)
     if _on_tpu():
@@ -46,6 +51,21 @@ def community_spmm(a_row: jax.Array, z_all: jax.Array,
     if _FORCE_INTERPRET:
         return _spmm_kernel(a_row, z_all, mask, interpret=True)
     return ref.community_spmm_ref(a_row, z_all, mask)
+
+
+def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
+                       ell_mask: jax.Array, z_all: jax.Array) -> jax.Array:
+    """Block-compressed aggregation: Σ_{d} Ã[m,d] Z[idx[m,d]] over the ELL
+    view (graph.BlockCSR) — FLOPs and memory are O(nnz·n_pad²·C), not M².
+
+    ell_blocks:  (M, max_deg, n_pad, n_pad)
+    ell_indices: (M, max_deg) int32
+    ell_mask:    (M, max_deg) — 1 for real blocks, 0 for padding
+    z_all:       (M, n_pad, C)
+    returns      (M, n_pad, C)
+    """
+    z_g = z_all[ell_indices] * ell_mask[..., None, None].astype(z_all.dtype)
+    return jnp.einsum("mdip,mdpc->mic", ell_blocks, z_g)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

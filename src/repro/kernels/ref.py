@@ -12,6 +12,22 @@ def community_spmm_ref(a_row: jax.Array, z_all: jax.Array,
     return jnp.einsum("rip,rpc->ic", masked, z_all)
 
 
+def community_spmm_ell_ref(ell_blocks: jax.Array, ell_indices: jax.Array,
+                           ell_mask: jax.Array, z_all: jax.Array) -> jax.Array:
+    """Loop oracle for the block-compressed (ELL) aggregation."""
+    m, max_deg = ell_indices.shape
+    out = jnp.zeros((m,) + (ell_blocks.shape[2], z_all.shape[-1]),
+                    z_all.dtype)
+    for row in range(m):
+        acc = jnp.zeros((ell_blocks.shape[2], z_all.shape[-1]), jnp.float32)
+        for d in range(max_deg):
+            acc += ell_mask[row, d] * (
+                ell_blocks[row, d].astype(jnp.float32)
+                @ z_all[ell_indices[row, d]].astype(jnp.float32))
+        out = out.at[row].set(acc.astype(z_all.dtype))
+    return out
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         window: int | None = None) -> jax.Array:
     """Exact softmax attention with GQA + causal/window masks (f32)."""

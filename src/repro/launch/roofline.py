@@ -112,8 +112,9 @@ def _operand_names(body: str, opname: str) -> list[str]:
         args += ch
     names = []
     for a in args.split(","):
-        a = a.strip()
-        m = re.match(r"%([\w.\-]+)", a)
+        # operands are written "f32[16,16]{1,0} %name" — the name follows
+        # the (optional) type annotation, so search, don't anchor
+        m = re.search(r"%([\w.\-]+)", a)
         if m:
             names.append(m.group(1))
     return names

@@ -38,6 +38,7 @@ def _smoke_batch(model, key):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_reduced_forward_and_train_step(arch):
     cfg = get_config(arch, reduced=True)

@@ -17,6 +17,7 @@ def setup():
     return g, cfg, admm
 
 
+@pytest.mark.slow
 def test_serial_three_layer_learns(setup):
     g, cfg, admm = setup
     tr = SerialADMMTrainer(cfg, admm, g, seed=0)
@@ -40,6 +41,7 @@ def test_parallel_three_layer_matches_w_update(setup):
                                    err_msg=f"W_{layer + 1}")
 
 
+@pytest.mark.slow
 def test_parallel_three_layer_converges(setup):
     from repro.core.parallel import ParallelADMMTrainer
     g, cfg, admm = setup

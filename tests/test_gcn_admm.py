@@ -37,6 +37,7 @@ def test_serial_admm_decreases_lagrangian_and_learns(tiny):
     assert np.isfinite(log.lagrangian).all()
 
 
+@pytest.mark.slow
 def test_parallel_matches_serial_one_community(tiny):
     """M=1 parallel == serial (same subproblems, one agent)."""
     from repro.core.parallel import ParallelADMMTrainer
@@ -54,6 +55,7 @@ def test_parallel_matches_serial_one_community(tiny):
     np.testing.assert_allclose(z_s, z_p, rtol=2e-3, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_parallel_communities_converge(tiny):
     """M=3 parallel ADMM reaches comparable accuracy to serial (paper §4.2:
     kept inter-community edges => no performance loss)."""

@@ -20,6 +20,7 @@ def _batch(cfg, b=4, s=32, seed=0):
     }
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-7b", "gemma-2b", "mamba2-1.3b"])
 def test_layerwise_admm_decreases_ce(arch):
     cfg = get_config(arch, reduced=True)
@@ -35,6 +36,7 @@ def test_layerwise_admm_decreases_ce(arch):
     assert np.isfinite(float(res))
 
 
+@pytest.mark.slow
 def test_layerwise_admm_moe():
     cfg = get_config("deepseek-moe-16b", reduced=True)
     tr = LayerwiseADMMTrainer(cfg, ADMMConfig(nu=1e-2, rho=1e-2))

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import gcn, graph, messages
@@ -56,6 +61,53 @@ def test_blocked_spmm_equals_dense(n, extra, m, c, seed):
     out_blocks = np.einsum("mrip,rpc->mic", layout.a_blocks, layout.pack(x))
     np.testing.assert_allclose(layout.unpack(out_blocks), a @ x,
                                rtol=2e-4, atol=2e-4)
+
+
+@given(n=st.integers(16, 48), extra=st.integers(5, 60),
+       m=st.integers(2, 4), c=st.integers(1, 8), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_masked_aggregation_equals_dense(n, extra, m, c, seed):
+    """Masked community_spmm (einsum + ref oracle) == the dense reduction:
+    for a real layout absent blocks are exactly zero, so restricting the
+    sum to r ∈ N_m loses nothing."""
+    from repro.kernels import ref
+    edges = _random_graph(n, extra, seed).astype(np.int32)
+    part = graph.partition_graph(n, edges, m, seed=seed)
+    layout = graph.build_community_layout(n, edges, part)
+    rng = np.random.default_rng(seed)
+    z = layout.pack(rng.normal(size=(n, c)).astype(np.float32))
+    dense = np.einsum("mrip,rpc->mic", layout.a_blocks, z)
+    nbr = layout.neighbor_mask.astype(np.float32)
+    masked_einsum = np.einsum("mrip,rpc->mic",
+                              layout.a_blocks * nbr[:, :, None, None], z)
+    np.testing.assert_allclose(masked_einsum, dense, rtol=1e-5, atol=1e-5)
+    for me in range(layout.num_parts):
+        out = ref.community_spmm_ref(jnp.asarray(layout.a_blocks[me]),
+                                     jnp.asarray(z),
+                                     jnp.asarray(nbr[me]))
+        np.testing.assert_allclose(np.asarray(out), dense[me],
+                                   rtol=1e-4, atol=1e-4)
+
+
+@given(n=st.integers(16, 48), extra=st.integers(5, 60),
+       m=st.integers(2, 4), c=st.integers(1, 6), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_sparse_layout_roundtrip(n, extra, m, c, seed):
+    """BlockCSR reconstructs the dense blocks, its spmm matches the dense
+    aggregation, and pack/unpack round-trips node arrays."""
+    edges = _random_graph(n, extra, seed).astype(np.int32)
+    part = graph.partition_graph(n, edges, m, seed=seed)
+    layout = graph.build_community_layout(n, edges, part, compressed=True)
+    csr = layout.compress()
+    assert csr.nnz == layout.nnz_blocks <= layout.num_parts ** 2
+    np.testing.assert_allclose(csr.to_dense(), layout.a_blocks,
+                               rtol=0, atol=0)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, c)).astype(np.float32)
+    z = layout.pack(x)
+    dense = np.einsum("mrip,rpc->mic", layout.a_blocks, z)
+    np.testing.assert_allclose(csr.spmm(z), dense, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(layout.unpack(z), x, rtol=0, atol=0)
 
 
 @given(seed=st.integers(0, 50))
