@@ -10,12 +10,21 @@ reports, per M:
     masked/compressed path (2·nnz·n_pad²·C);
   * per-iteration collective bytes of the parallel ADMM trainer's gathers:
     full all-gather vs the neighbour-only volume (messages.gather_bytes) —
-    the roofline's collective term, see benchmarks/roofline.py.
+    the roofline's collective term, see benchmarks/roofline.py;
+  * an end-to-end trainer sweep: ParallelADMMTrainer in dense vs compressed
+    mode per M — device-resident adjacency bytes (the dense block tensor vs
+    the sharded ELL rows) and per-step wall time.  Compressed bytes must
+    scale with nnz blocks (~linear in M on the power-law generator), dense
+    with M².
 
-Run: PYTHONPATH=src python benchmarks/block_sparsity.py
+Run: PYTHONPATH=src python benchmarks/block_sparsity.py [--quick]
+                                                        [--out FILE.json]
+Emits machine-readable BENCH_block_sparsity.json next to the repo root.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import pathlib
 import sys
 import time
@@ -79,6 +88,7 @@ def sweep(ms=(4, 8, 16, 32), nodes_per_part: int = 32, c: int = 64,
         flops_dense = 2.0 * dense_blocks * n_pad * n_pad * c
         flops_sparse = 2.0 * nnz * n_pad * n_pad * c
         comm = messages.gather_bytes(layout.neighbor_mask, n_pad, [c])
+        adj = messages.adjacency_bytes(layout.neighbor_mask, n_pad)
         coll = collective_terms(comm["full_bytes"], comm["needed_bytes"])
         rows.append({
             "M": m, "n_pad": n_pad, "nnz": nnz,
@@ -93,12 +103,55 @@ def sweep(ms=(4, 8, 16, 32), nodes_per_part: int = 32, c: int = 64,
             "coll_s_full": coll["collective_s"],
             "coll_s_needed": coll["collective_sparse_s"],
             "coll_savings": coll["collective_savings"],
+            "adj_dense_bytes": adj["dense_bytes"],
+            "adj_ell_bytes": adj["ell_bytes"],
+            "max_deg": adj["max_deg"],
         })
     return rows
 
 
-def main():
-    rows = sweep()
+def trainer_sweep(ms=(4, 8, 16, 32), nodes_per_part: int = 32,
+                  hidden: int = 32, steps: int = 3, seed: int = 0
+                  ) -> list[dict]:
+    """End-to-end ParallelADMMTrainer per M: dense vs compressed
+    device-resident adjacency bytes and per-step wall time."""
+    from repro.core import gcn
+    from repro.core.parallel import ParallelADMMTrainer
+    from repro.core.subproblems import ADMMConfig
+
+    recs = []
+    for m in ms:
+        g, part = graph.synthetic_powerlaw_communities(
+            m, nodes_per_part=nodes_per_part, attach=2, seed=seed,
+            feat_dim=16)
+        cfg = gcn.GCNConfig(layer_dims=(16, hidden, g.num_classes))
+        admm = ADMMConfig(nu=1e-3, rho=1e-3)
+        for mode, compressed in (("dense", False), ("compressed", True)):
+            tr = ParallelADMMTrainer(cfg, admm, g, num_parts=m, seed=seed,
+                                     part=part, compressed=compressed)
+            assert (tr.data.a_blocks is None) == compressed
+            tr.step()                                    # compile
+            jax.block_until_ready(tr.state.zs[-1])
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                tr.step()
+            jax.block_until_ready(tr.state.zs[-1])
+            per_step = (time.perf_counter() - t0) / steps
+            recs.append({
+                "mode": mode, "M": m, "n_pad": tr.layout.n_pad,
+                "nnz_blocks": tr.layout.nnz_blocks,
+                "adjacency_bytes": int(tr.data.adjacency_nbytes),
+                "per_epoch_s": per_step,
+            })
+            print(f"[trainer] M={m:3d} {mode:10s} "
+                  f"adj {recs[-1]['adjacency_bytes']/1e6:8.3f} MB  "
+                  f"step {per_step*1e3:8.1f} ms")
+    return recs
+
+
+def main(quick: bool = False, out: "str | None" = None):
+    ms = (4, 8) if quick else (4, 8, 16, 32)
+    rows = sweep(ms=ms)
     hdr = (f"{'M':>3s} {'nnz':>4s} {'dens':>5s} {'mem':>5s} "
            f"{'dense_ms':>9s} {'masked_ms':>10s} {'ell_ms':>7s} "
            f"{'GF_dense':>9s} {'GF_nnz':>7s} {'coll_full':>10s} "
@@ -125,8 +178,30 @@ def main():
     assert sparse_growth < dense_growth, (sparse_growth, dense_growth)
     print(f"FLOP growth {m0['M']}→{m1['M']} communities: dense "
           f"{dense_growth:.1f}×, nnz-proportional {sparse_growth:.1f}×")
-    return rows
+
+    trainer = trainer_sweep(ms=ms, steps=1 if quick else 3)
+    # device-resident adjacency must scale with nnz blocks, not M²
+    comp = [r for r in trainer if r["mode"] == "compressed"]
+    dense = [r for r in trainer if r["mode"] == "dense"]
+    comp_growth = comp[-1]["adjacency_bytes"] / comp[0]["adjacency_bytes"]
+    dense_growth = dense[-1]["adjacency_bytes"] / dense[0]["adjacency_bytes"]
+    assert comp_growth < dense_growth, (comp_growth, dense_growth)
+    print(f"Adjacency byte growth M={comp[0]['M']}→{comp[-1]['M']}: dense "
+          f"{dense_growth:.1f}×, compressed {comp_growth:.1f}×")
+
+    payload = {"quick": quick, "agg_sweep": rows, "trainer_sweep": trainer}
+    out_path = pathlib.Path(out) if out else \
+        pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_block_sparsity.json"
+    out_path.write_text(json.dumps(payload, indent=2))
+    print(f"wrote {out_path}")
+    return payload
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small M sweep / few reps (CI smoke)")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out)

@@ -26,12 +26,13 @@ def bench_table3_speedup() -> list[tuple[str, float, str]]:
     rows = speedup.run(epochs=15, hidden=256)
     out = []
     for r in rows:
-        out.append((f"table3/{r['dataset']}/serial_s",
-                    r["serial_total_s"], ""))
-        out.append((f"table3/{r['dataset']}/parallel_s",
-                    r["parallel_total_s"], ""))
-        out.append((f"table3/{r['dataset']}/speedup",
-                    r["speedup"], "paper: 3.30x (Computers); 2.98x (Photo)"))
+        tag = f"table3/{r['dataset']}/{r['mode']}"
+        out.append((f"{tag}/serial_s", r["serial_total_s"], ""))
+        out.append((f"{tag}/parallel_s", r["parallel_total_s"], ""))
+        out.append((f"{tag}/speedup", r["speedup"],
+                    "paper: 3.30x (Computers); 2.98x (Photo)"))
+        out.append((f"{tag}/adjacency_mb",
+                    round(r["adjacency_bytes"] / 1e6, 3), ""))
     (OUT_DIR / "table3_speedup.json").write_text(json.dumps(rows, indent=2))
     return out
 

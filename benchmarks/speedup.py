@@ -2,18 +2,26 @@
 
 Serial = one community, one device.  Parallel = M=3 communities on 3 host
 devices (the paper used 3 agents on one Xeon; host CPU devices are real
-threads, so the speedup mechanism matches).  Each configuration runs in a
-subprocess so the device count can differ (XLA locks it at first init).
+threads, so the speedup mechanism matches), in both the dense-replicated
+and the block-compressed (sharded ELL) adjacency representations.  Each
+configuration runs in a subprocess so the device count can differ (XLA
+locks it at first init).
 
 The paper reports training/communication time separately; a fused XLA
 program has no such boundary, so alongside wall-time we report the
 *collective byte volume* of the parallel step (the communication the paper
-timed) parsed from the compiled HLO.
+timed) parsed from the compiled HLO, plus the device-resident adjacency
+bytes each representation holds.
+
+Run: PYTHONPATH=src python benchmarks/speedup.py [--quick] [--out FILE.json]
+Emits machine-readable BENCH_speedup.json next to the repo root.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import pathlib
 import subprocess
 import sys
 import textwrap
@@ -30,14 +38,18 @@ WORKER = textwrap.dedent("""
     cfg = gcn.GCNConfig(layer_dims=(g.features.shape[1], hidden,
                                     g.num_classes))
     admm = ADMMConfig(nu=hyper, rho=hyper)
+    adjacency_bytes = 0
     if mode == "serial":
         from repro.core.serial import SerialADMMTrainer
         tr = SerialADMMTrainer(cfg, admm, g, seed=0)
         step = tr.step
+        adjacency_bytes = int(tr.a_tilde.nbytes)
     else:
         from repro.core.parallel import ParallelADMMTrainer
-        tr = ParallelADMMTrainer(cfg, admm, g, num_parts=3, seed=0)
+        tr = ParallelADMMTrainer(cfg, admm, g, num_parts=3, seed=0,
+                                 compressed=(mode == "compressed"))
         step = tr.step
+        adjacency_bytes = int(tr.data.adjacency_nbytes)
     step(); jax.block_until_ready(tr.state.zs[-1])   # compile
     t0 = time.perf_counter()
     for _ in range(epochs):
@@ -56,6 +68,7 @@ WORKER = textwrap.dedent("""
                       "per_epoch_s": total / epochs,
                       "per_device_flops": float(census.flops),
                       "collective_bytes": float(census.collective_bytes),
+                      "adjacency_bytes": adjacency_bytes,
                       "test_acc": float(acc[1])}))
 """)
 
@@ -63,7 +76,7 @@ WORKER = textwrap.dedent("""
 def _run(mode: str, dataset: str, epochs: int, hidden: int) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + \
-        ("3" if mode == "parallel" else "1")
+        ("1" if mode == "serial" else "3")
     env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
     out = subprocess.run(
         [sys.executable, "-c", WORKER, mode, dataset, str(epochs),
@@ -77,30 +90,55 @@ def run(epochs: int = 20, hidden: int = 256,
     rows = []
     for ds in datasets:
         serial = _run("serial", ds, epochs, hidden)
-        parallel = _run("parallel", ds, epochs, hidden)
-        speedup = serial["total_s"] / parallel["total_s"]
-        # analytic speedup: per-agent compute ratio from the HLO census —
-        # what the wall clock would show on hardware with ≥M real cores
-        # (this container has ONE core, so threads serialize; the paper's
-        # Xeon had many)
-        flops_ratio = (serial["per_device_flops"]
-                       / max(parallel["per_device_flops"], 1.0))
-        rows.append({
-            "dataset": ds,
-            "serial_total_s": round(serial["total_s"], 3),
-            "parallel_total_s": round(parallel["total_s"], 3),
-            "speedup": round(speedup, 2),
-            "analytic_compute_speedup": round(flops_ratio, 2),
-            "parallel_collective_bytes": parallel["collective_bytes"],
-            "serial_test_acc": round(serial["test_acc"], 3),
-            "parallel_test_acc": round(parallel["test_acc"], 3),
-        })
-        print(f"[speedup] {ds}: serial {serial['total_s']:.2f}s "
-              f"parallel {parallel['total_s']:.2f}s -> {speedup:.2f}x "
-              f"wall-clock (1 CPU core), {flops_ratio:.2f}x per-agent "
-              f"compute (paper: 3.30x/2.98x on 3 agents)")
+        for mode in ("parallel", "compressed"):
+            parallel = _run(mode, ds, epochs, hidden)
+            speedup = serial["total_s"] / parallel["total_s"]
+            # analytic speedup: per-agent compute ratio from the HLO census —
+            # what the wall clock would show on hardware with ≥M real cores
+            # (this container has ONE core, so threads serialize; the paper's
+            # Xeon had many)
+            flops_ratio = (serial["per_device_flops"]
+                           / max(parallel["per_device_flops"], 1.0))
+            rows.append({
+                "mode": mode,
+                "dataset": ds,
+                "serial_total_s": round(serial["total_s"], 3),
+                "parallel_total_s": round(parallel["total_s"], 3),
+                "serial_per_epoch_s": round(serial["per_epoch_s"], 4),
+                "parallel_per_epoch_s": round(parallel["per_epoch_s"], 4),
+                "speedup": round(speedup, 2),
+                "analytic_compute_speedup": round(flops_ratio, 2),
+                "parallel_collective_bytes": parallel["collective_bytes"],
+                "adjacency_bytes": parallel["adjacency_bytes"],
+                "serial_adjacency_bytes": serial["adjacency_bytes"],
+                "serial_test_acc": round(serial["test_acc"], 3),
+                "parallel_test_acc": round(parallel["test_acc"], 3),
+            })
+            print(f"[speedup] {ds} ({mode}): serial {serial['total_s']:.2f}s "
+                  f"parallel {parallel['total_s']:.2f}s -> {speedup:.2f}x "
+                  f"wall-clock (1 CPU core), {flops_ratio:.2f}x per-agent "
+                  f"compute, adjacency {parallel['adjacency_bytes']/1e6:.2f} "
+                  f"MB (paper: 3.30x/2.98x on 3 agents)")
     return rows
 
 
+def main(quick: bool = False, out: "str | None" = None):
+    if quick:
+        rows = run(epochs=2, hidden=32, datasets=("amazon_photo_mini",))
+    else:
+        rows = run()
+    payload = {"quick": quick, "rows": rows}
+    out_path = pathlib.Path(out) if out else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_speedup.json"
+    out_path.write_text(json.dumps(payload, indent=2))
+    print(f"wrote {out_path}")
+    return payload
+
+
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=2))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny run (CI smoke): 1 dataset, 2 epochs")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+    print(json.dumps(main(quick=args.quick, out=args.out)["rows"], indent=2))

@@ -26,6 +26,13 @@ def main():
     ap.add_argument("--hidden", type=int, default=128)
     ap.add_argument("--comm-bf16", action="store_true",
                     help="bf16 message payloads (§Perf optimization)")
+    ap.add_argument("--compressed", action="store_true",
+                    help="block-compressed (ELL) adjacency: each shard "
+                         "holds only its communities' neighbour blocks — "
+                         "no dense (M,M,n_pad,n_pad) tensor on device")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route aggregation through the Pallas kernels "
+                         "(TPU; set REPRO_PALLAS_INTERPRET=1 elsewhere)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -42,7 +49,9 @@ def main():
           f"({100 * cut / g.num_edges:.1f}%)")
 
     trainer = ParallelADMMTrainer(cfg, admm, g, num_parts=args.parts,
-                                  seed=0, comm_bf16=args.comm_bf16)
+                                  seed=0, comm_bf16=args.comm_bf16,
+                                  compressed=args.compressed,
+                                  use_kernel=args.use_kernel)
     print(f"mesh: {dict(trainer.mesh.shape)}; neighbour topology:\n"
           f"{np.asarray(trainer.data.neighbor_mask).astype(int)}")
     cs = trainer.comm_stats
@@ -50,6 +59,11 @@ def main():
           f"neighbour-only {cs['needed_bytes'] / 1e6:.2f} MB "
           f"({cs['nnz_blocks']}/{cs['dense_blocks']} blocks, "
           f"{100 * cs['savings_ratio']:.0f}% saved)")
+    adj = cs["adjacency"]
+    mode = "compressed (ELL)" if args.compressed else "dense"
+    print(f"adjacency on device [{mode}]: {adj['resident_bytes'] / 1e6:.2f} "
+          f"MB (dense would be {adj['dense_bytes'] / 1e6:.2f} MB, "
+          f"max_deg {adj['max_deg']})")
 
     log = trainer.train(args.epochs, verbose=False)
     stride = max(1, args.epochs // 10)

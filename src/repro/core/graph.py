@@ -7,6 +7,7 @@ dense layout used by the shard_map parallel trainer and the Pallas
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Sequence
 
@@ -79,14 +80,22 @@ def partition_graph(num_nodes: int, edges: Array, num_parts: int,
             cursor += 1
         if cursor >= num_nodes:
             break
-        frontier = [int(order[cursor])]
+        # deque + enqueue-time seen marking: O(N + E) per part.  A node is
+        # processed at its *earliest* enqueue position either way, so the
+        # assignment order (and hence the partition for a fixed seed) is
+        # identical to the old list.pop(0)/re-enqueue implementation, which
+        # was O(N·frontier) and enqueued each neighbour once per discovery.
+        seed_node = int(order[cursor])
+        frontier = collections.deque([seed_node])
+        seen = {seed_node}
         while frontier and sizes[p] < cap:
-            node = frontier.pop(0)
-            if part[node] >= 0:
-                continue
+            node = frontier.popleft()
             part[node] = p
             sizes[p] += 1
-            frontier.extend(n for n in adj[node] if part[n] < 0)
+            for n in adj[node]:
+                if part[n] < 0 and n not in seen:
+                    seen.add(n)
+                    frontier.append(n)
     # Any stragglers go to the least-loaded part.
     for node in np.flatnonzero(part < 0):
         p = int(np.argmin(sizes))
@@ -150,6 +159,30 @@ class BlockCSR:
     @property
     def max_deg(self) -> int:
         return int(self.ell_indices.shape[1])
+
+    @property
+    def ell_nbytes(self) -> int:
+        """Device-resident bytes of the ELL view (blocks + indices + mask)."""
+        return (self.ell_blocks.nbytes + self.ell_indices.nbytes
+                + self.ell_mask.nbytes)
+
+    def shard_slice(self, shard: int, n_shards: int
+                    ) -> tuple[Array, Array, Array]:
+        """ELL rows for the communities hosted on mesh shard ``shard``.
+
+        Community m's ELL row sits at index m (community-major order — the
+        same order ``CommunityLayout.pack`` uses for Z), so sharding the
+        leading axis with ``P('comm')`` places rows [s·k, (s+1)·k) on shard
+        s; this helper extracts that exact slice host-side (benchmarks,
+        per-shard byte accounting).  ``ell_indices`` stay *global* community
+        ids — they index the gathered (M, n_pad, C) payload, not local rows.
+        """
+        if self.num_parts % n_shards:
+            raise ValueError(f"M={self.num_parts} not divisible by "
+                             f"n_shards={n_shards}")
+        k = self.num_parts // n_shards
+        sl = slice(shard * k, (shard + 1) * k)
+        return self.ell_blocks[sl], self.ell_indices[sl], self.ell_mask[sl]
 
     def to_dense(self) -> Array:
         """Reconstruct the dense (M, M, n_pad, n_pad) block tensor."""

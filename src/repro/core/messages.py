@@ -82,6 +82,35 @@ def gather_bytes(neighbor_mask, n_pad: int, feature_dims: Sequence[int],
             "savings_ratio": 1.0 - (needed / full if full else 0.0)}
 
 
+def adjacency_bytes(neighbor_mask, n_pad: int, itemsize: int = 4) -> dict:
+    """Device-resident adjacency bytes per representation.
+
+    ``dense_bytes`` is the replicated-layout block tensor the parallel
+    trainer shards row-wise in dense mode (M² blocks in total across the
+    mesh); ``ell_bytes`` is the block-compressed (ELL) payload the
+    compressed trainer holds instead — M·max_deg blocks plus the int32
+    index / float32 mask planes; ``csr_bytes`` is the tighter
+    CSR-of-blocks bound (nnz blocks, host-side).  On power-law community
+    graphs max_deg is ~constant in M, so ell_bytes grows ~linearly while
+    dense_bytes grows quadratically.
+    """
+    nbr = np.asarray(neighbor_mask)
+    m = nbr.shape[0]
+    deg = nbr.sum(axis=1)
+    max_deg = int(deg.max()) if m else 0
+    nnz = int(nbr.sum())
+    block = n_pad * n_pad * itemsize
+    return {
+        "dense_bytes": m * m * block,
+        "ell_bytes": m * max_deg * (block + 4 + 4),
+        "csr_bytes": nnz * block,
+        "nnz_blocks": nnz,
+        "max_deg": max_deg,
+        "ell_ratio": (m * max_deg * (block + 8)) / (m * m * block)
+        if m else 0.0,
+    }
+
+
 def second_order_from_relay(q_all: Array, a_row: Array, z_local: Array,
                             w_next: Array) -> Array:
     """s²_{l,r→m} for all r, reconstructed receiver-side (eq. 4).

@@ -17,7 +17,25 @@ One ADMM iteration is a single ``shard_map``-ed program:
 
 Communication per iteration = all-gathers of Z/U/q (the roofline
 'collective' term); the paper's p/s messages are exactly the gathered relay
-aggregates, see messages.py.
+aggregates, see messages.py.  Z_0 is static input — it is gathered exactly
+once per iteration and reused by every consumer (layer-1 input and the
+1-layer dual refresh).
+
+Adjacency representations (``compressed`` flag):
+
+  * dense — every shard holds its k rows of the (M, M, n_pad, n_pad) block
+    tensor: O(k·M·n_pad²) bytes per shard, and the Z-update coupling term
+    sums over all M communities (masked): O(M·n_pad²·C) FLOPs per lane.
+  * compressed — each shard holds only its lanes' ELL rows,
+    (k, max_deg, n_pad, n_pad) blocks + (k, max_deg) indices/mask
+    (graph.BlockCSR): O(k·max_deg·n_pad²) bytes per shard, no dense block
+    tensor anywhere on device.  Aggregations run through the lane-aware ELL
+    kernel (kernels.community_spmm_ell) and the coupling term is its
+    transposed-block form over the max_deg neighbours only:
+    O(max_deg·n_pad²·C) FLOPs per lane.  On power-law community graphs
+    max_deg is ~constant in M, so per-shard memory and Z-coupling FLOPs
+    stop scaling with the community count — the regime where M can grow
+    past what a dense replicated layout fits on device.
 """
 from __future__ import annotations
 
@@ -50,45 +68,61 @@ class ParallelState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class CommunityData:
-    """Device-ready community-blocked graph tensors."""
-    a_blocks: Array      # (M, M, n_pad, n_pad)
+    """Device-ready community-blocked graph tensors.
+
+    Exactly one adjacency representation is resident: dense mode holds
+    ``a_blocks`` (M, M, n_pad, n_pad); compressed mode holds only the ELL
+    view ``ell_blocks``/``ell_indices``/``ell_mask`` (graph.BlockCSR,
+    O(nnz·n_pad²) bytes) and ``a_blocks`` is None — the shard_map trainer
+    aggregates straight from the sharded ELL rows.
+    """
+    a_blocks: "Array | None"   # (M, M, n_pad, n_pad) — dense mode only
     z0: Array            # (M, n_pad, C0)
     labels: Array        # (M, n_pad) int32
     train_mask: Array    # (M, n_pad) float32
     test_mask: Array     # (M, n_pad) float32
     neighbor_mask: Array  # (M, M) bool
     denom: Array         # scalar — global labeled-node count
-    # block-compressed Ã (ELL view; graph.BlockCSR): device-resident
-    # (ell_blocks, ell_indices, ell_mask) when built with compressed=True,
-    # for kops.community_spmm_ell-based consumers (benchmarks, sparse
-    # backends).  NOTE: the shard_map trainer still aggregates from the
-    # dense a_blocks — requesting the ELL view *adds* its O(nnz·n_pad²)
-    # on top; the memory win comes from dropping a_blocks, which a dense
-    # replicated shard_map cannot do yet.
-    block_ell: "tuple[Array, Array, Array] | None" = None
+    # block-compressed Ã (ELL view) — compressed mode only
+    ell_blocks: "Array | None" = None    # (M, max_deg, n_pad, n_pad)
+    ell_indices: "Array | None" = None   # (M, max_deg) int32
+    ell_mask: "Array | None" = None      # (M, max_deg) float32
+
+    @property
+    def compressed(self) -> bool:
+        return self.a_blocks is None
 
     @property
     def num_parts(self) -> int:
-        return int(self.a_blocks.shape[0])
+        return int(self.z0.shape[0])
+
+    @property
+    def adjacency_nbytes(self) -> int:
+        """Device-resident adjacency bytes of this representation."""
+        if self.compressed:
+            return (self.ell_blocks.nbytes + self.ell_indices.nbytes
+                    + self.ell_mask.nbytes)
+        return self.a_blocks.nbytes
 
 
 def community_data(g: graph.Graph, layout: graph.CommunityLayout,
                    compressed: bool = False) -> CommunityData:
-    block_ell = None
-    if compressed or layout.block_csr is not None:
+    if compressed:
         csr = layout.compress()
-        block_ell = (jnp.asarray(csr.ell_blocks),
-                     jnp.asarray(csr.ell_indices),
-                     jnp.asarray(csr.ell_mask))
+        adj = dict(a_blocks=None,
+                   ell_blocks=jnp.asarray(csr.ell_blocks),
+                   ell_indices=jnp.asarray(csr.ell_indices),
+                   ell_mask=jnp.asarray(csr.ell_mask))
+    else:
+        adj = dict(a_blocks=jnp.asarray(layout.a_blocks))
     return CommunityData(
-        a_blocks=jnp.asarray(layout.a_blocks),
         z0=jnp.asarray(layout.pack(g.features)),
         labels=jnp.asarray(layout.pack(g.labels.astype(np.int32))),
         train_mask=jnp.asarray(layout.pack(g.train_mask.astype(np.float32))),
         test_mask=jnp.asarray(layout.pack(g.test_mask.astype(np.float32))),
         neighbor_mask=jnp.asarray(layout.neighbor_mask),
         denom=jnp.asarray(float(g.train_mask.sum())),
-        block_ell=block_ell,
+        **adj,
     )
 
 
@@ -218,30 +252,52 @@ def fista_lanes(admm: ADMMConfig, b, u, labels, mask, z_init, denom):
 # ---------------------------------------------------------------------------
 
 def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
-                    comm_bf16: bool,
-                    a_row, nbr_row, z0_loc, labels_loc, mask_loc, denom,
+                    comm_bf16: bool, compressed: bool,
+                    adj, nbr_row, z0_loc, labels_loc, mask_loc, denom,
                     ws, zs_loc, u_loc, taus, thetas):
-    """Shapes per shard: a_row (k,M,n,n); nbr_row (k,M); z*_loc (k,n,C);
-    thetas[l] (k,)."""
+    """Shapes per shard: nbr_row (k,M); z*_loc (k,n,C); thetas[l] (k,).
+
+    ``adj`` is the shard's adjacency rows — dense mode: a_row (k,M,n,n);
+    compressed mode: (ell_rows (k,max_deg,n,n), ell_idx (k,max_deg),
+    ell_msk (k,max_deg)) with *global* community ids in ell_idx.
+    """
     f = gcn.activation_fn(cfg.activation)
     num_layers = cfg.num_layers
-    m_total = a_row.shape[1]
+    m_total = nbr_row.shape[1]
     nbrf = nbr_row.astype(jnp.float32)           # (k, M) 1/0 neighbour rows
     # union of this shard's lanes' neighbourhoods: the only communities
     # whose payload rows any local subproblem reads
     shard_nbr = jnp.max(nbrf, axis=0)            # (M,)
 
-    if use_kernel:
+    if compressed:
+        ell_rows, ell_idx, ell_msk = adj
+        ell_f = ell_msk.astype(jnp.float32)      # (k, max_deg)
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            def rowagg(zh):
+                # scalar-prefetched indices steer the Z-block DMA; padding
+                # slots skip via @pl.when: work ∝ nnz blocks
+                return kops.community_spmm_ell(ell_rows, ell_idx, ell_msk,
+                                               zh)
+        else:
+            def rowagg(zh):              # Σ_{d} Ã[m,d] Z[idx[m,d]] per lane
+                zg = zh[ell_idx] * ell_f[..., None, None]
+                return jnp.einsum("kdip,kdpc->kic", ell_rows, zg)
+    elif use_kernel:
+        a_row = adj
         from repro.kernels import ops as kops
 
-        def rowagg(a, zh):
+        def rowagg(zh):
             # per-lane neighbour rows engage the kernel's @pl.when block
             # skipping: work ∝ nnz blocks, not M²
-            return kops.community_spmm(a, zh, nbr_row)
+            return kops.community_spmm(a_row, zh, nbr_row)
     else:
-        def rowagg(a, zh):                   # Σ_{r∈N_m} Ã_{m,r} Z_r per lane
+        a_row = adj
+
+        def rowagg(zh):                  # Σ_{r∈N_m} Ã_{m,r} Z_r per lane
             return jnp.einsum("kmip,mpc->kic",
-                              a * nbrf[:, :, None, None], zh)
+                              a_row * nbrf[:, :, None, None], zh)
 
     def gather(x_loc, neighbors_only: bool = True):
         """(k, n, C) local -> (M, n, C) global (community-major order).
@@ -272,14 +328,17 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
             g = g * shard_nbr[:, None, None].astype(dt)
         return g
 
-    # gathered k-th iterates — one communication round per ADMM iteration
+    # gathered k-th iterates — one communication round per ADMM iteration.
+    # Z_0 is static input: gather it exactly once per step and reuse it for
+    # the layer-1 input and (1-layer nets) the dual refresh.
+    zh0 = gather(z0_loc)                        # Z_0, gathered once
     zh = [gather(z) for z in zs_loc]            # Z_1..Z_L
-    zh_in = [gather(z0_loc)] + zh[:-1]          # layer inputs
+    zh_in = [zh0] + zh[:-1]                     # layer inputs
 
     # ---- Line 3: W update (layer-parallel, Jacobi over Z^k) ----
     new_ws, new_taus = [], []
     for l in range(num_layers):
-        agg = rowagg(a_row, zh_in[l])           # (k, n, C_{l-1})
+        agg = rowagg(zh_in[l])                  # (k, n, C_{l-1})
 
         if l < num_layers - 1:
             def local_obj(w, agg=agg, z=zs_loc[l]):
@@ -298,43 +357,63 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     new_zs, new_thetas = [], []
     for l in range(1, num_layers):              # hidden layers (eq. 5/6)
         w_l, w_next = new_ws[l - 1], new_ws[l]
-        target1 = f(rowagg(a_row, zh_in[l - 1]) @ w_l)       # (k, n, C_l)
+        target1 = f(rowagg(zh_in[l - 1]) @ w_l)              # (k, n, C_l)
         # relay aggregates q_{l,r} (eq. 4 second-order payload), all r
-        q_loc = rowagg(a_row, zh[l - 1]) @ w_next            # (k, n, C_next)
+        q_loc = rowagg(zh[l - 1]) @ w_next                   # (k, n, C_next)
         q_all = gather(q_loc)                                # (M, n, C_next)
         z_ref = zs_loc[l - 1]
 
-        def pre_all(z, q_all=q_all, z_ref=z_ref, w_next=w_next):
-            # every community's next-layer pre-activation as fn of my lanes:
-            # pre[j, r] = q_r + Ã_{r,m_j} (z_j − z_ref_j) W   (zero for r∉N_m)
-            delta = (z - z_ref) @ w_next                     # (k, n, C)
-            return q_all[None] + jnp.einsum("kmnp,knc->kmpc", a_row, delta)
+        # Coupling term of ψ (paper eq. 5/6): every neighbour community r's
+        # next-layer pre-activation as a function of my lanes,
+        #   pre[j, r] = q_r + Ã_{r,m_j} (z_j − z_ref_j) W.
+        # Lane m's ψ only sums r ∈ N_m ∪ {m} — the r ∉ N_m residuals are
+        # constants in z (zero gradient) and drop from the objective.
+        if compressed:
+            # neighbour-compressed form: enumerate the max_deg stored
+            # neighbours only.  Ã_{r,m} = Ã_{m,r}ᵀ (Ã symmetric), so the
+            # stored row blocks are consumed transposed ("kdnp,knc->kdpc")
+            # — the gather-transpose trick of second_order_from_relay.
+            # O(max_deg·n_pad²·C) per lane instead of the dense O(M·…).
+            def pre_nbr(z, q_all=q_all, z_ref=z_ref, w_next=w_next):
+                delta = (z - z_ref) @ w_next                 # (k, n, C)
+                own = jnp.einsum("kdnp,knc->kdpc", ell_rows, delta)
+                return q_all[ell_idx] + own                  # (k, D, n, C)
 
-        # neighbour weighting of the coupling terms: lane m's ψ only sums
-        # the communities r ∈ N_m ∪ {m} whose pre-activations depend on
-        # Z_m (paper eq. 5/6) — the r ∉ N_m residuals are constants in z
-        # (zero gradient) and are dropped from the objective
-        wt = nbrf[:, :, None, None]                          # (k, M, 1, 1)
+            wt = ell_f[..., None, None]                      # (k, D, 1, 1)
+
+            def nbr_vals(x_all):
+                """(M, n, C) gathered payload -> this lane's (k, D, n, C)."""
+                return x_all[ell_idx]
+        else:
+            def pre_nbr(z, q_all=q_all, z_ref=z_ref, w_next=w_next):
+                delta = (z - z_ref) @ w_next                 # (k, n, C)
+                return q_all[None] + jnp.einsum("kmnp,knc->kmpc",
+                                                a_row, delta)
+
+            wt = nbrf[:, :, None, None]                      # (k, M, 1, 1)
+
+            def nbr_vals(x_all):
+                return x_all[None]                           # (1, M, n, C)
 
         if l + 1 < num_layers:
             zh_next = zh[l]
 
-            def obj_lanes(z, target1=target1, pre_all=pre_all,
+            def obj_lanes(z, target1=target1, pre_nbr=pre_nbr,
                           zh_next=zh_next):
                 r1 = z - target1
                 v1 = 0.5 * admm.nu * jnp.sum(r1 * r1, axis=(1, 2))
-                r2 = (zh_next[None] - f(pre_all(z))) * wt    # (k, M, n, C)
+                r2 = (nbr_vals(zh_next) - f(pre_nbr(z))) * wt
                 v2 = 0.5 * admm.nu * jnp.sum(r2 * r2, axis=(1, 2, 3))
                 return v1 + v2
         else:
             zh_last, uh = zh[l], gather(u_loc)
 
-            def obj_lanes(z, target1=target1, pre_all=pre_all,
+            def obj_lanes(z, target1=target1, pre_nbr=pre_nbr,
                           zh_last=zh_last, uh=uh):
                 r1 = z - target1
                 v1 = 0.5 * admm.nu * jnp.sum(r1 * r1, axis=(1, 2))
-                r2 = (zh_last[None] - pre_all(z)) * wt       # (k, M, n, C)
-                lin = jnp.sum(uh[None] * r2, axis=(1, 2, 3))
+                r2 = (nbr_vals(zh_last) - pre_nbr(z)) * wt
+                lin = jnp.sum(nbr_vals(uh) * r2, axis=(1, 2, 3))
                 quad = 0.5 * admm.rho * jnp.sum(r2 * r2, axis=(1, 2, 3))
                 return v1 + lin + quad
 
@@ -344,7 +423,7 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
         new_thetas.append(theta)
 
     # ---- Z_L: per-community FISTA prox (eq. 7) ----
-    b = rowagg(a_row, zh_in[num_layers - 1]) @ new_ws[-1]
+    b = rowagg(zh_in[num_layers - 1]) @ new_ws[-1]
     z_last = fista_lanes(admm, b, u_loc, labels_loc, mask_loc,
                          zs_loc[-1], denom)
     new_zs.append(z_last)
@@ -352,8 +431,8 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
 
     # ---- Line 5: dual ascent (eq. 3) with updated iterates ----
     zh_pen_new = gather(new_zs[num_layers - 2]) if num_layers >= 2 \
-        else gather(z0_loc)
-    b_new = rowagg(a_row, zh_pen_new) @ new_ws[-1]
+        else zh0
+    b_new = rowagg(zh_pen_new) @ new_ws[-1]
     new_u = u_loc + admm.rho * (new_zs[-1] - b_new)
 
     return (tuple(new_ws), tuple(new_zs), new_u,
@@ -372,6 +451,7 @@ class ParallelADMMTrainer:
                  use_kernel: bool = False, comm_bf16: bool = False,
                  compressed: bool = False, part: np.ndarray | None = None):
         self.cfg, self.admm, self.graph = cfg, admm, g
+        self.compressed = compressed
         if part is None:
             part = graph.partition_graph(g.num_nodes, g.edges, num_parts,
                                          seed=seed)
@@ -401,8 +481,18 @@ class ParallelADMMTrainer:
 
         sharded, rep = P(AXIS), P()
         n_l = cfg.num_layers
-        body = partial(_iteration_body, cfg, admm, use_kernel, comm_bf16)
-        in_specs = (sharded, sharded, sharded, sharded, sharded, rep,
+        body = partial(_iteration_body, cfg, admm, use_kernel, comm_bf16,
+                       compressed)
+        if compressed:
+            # each shard carries only its lanes' ELL rows — no dense
+            # (M, M, n_pad, n_pad) tensor exists on device
+            adj_data = (self.data.ell_blocks, self.data.ell_indices,
+                        self.data.ell_mask)
+            adj_spec = (sharded, sharded, sharded)
+        else:
+            adj_data = self.data.a_blocks
+            adj_spec = sharded
+        in_specs = (adj_spec, sharded, sharded, sharded, sharded, rep,
                     (rep,) * n_l, (sharded,) * n_l, sharded,
                     (rep,) * n_l, (sharded,) * n_l)
         out_specs = ((rep,) * n_l, (sharded,) * n_l, sharded,
@@ -413,7 +503,7 @@ class ParallelADMMTrainer:
         @jax.jit
         def step(state: ParallelState):
             ws, zs, u, taus, thetas = mapped(
-                self.data.a_blocks, self.data.neighbor_mask,
+                adj_data, self.data.neighbor_mask,
                 self.data.z0, self.data.labels,
                 self.data.train_mask, self.data.denom,
                 state.weights, state.zs, state.u, state.taus, state.thetas)
@@ -422,40 +512,86 @@ class ParallelADMMTrainer:
         self._step = step
 
         # collective volume per iteration: the gathers the body issues are
-        # one (M, n_pad, C) payload each for Z_0 input, Z_1..Z_L, the relay
-        # aggregates q (hidden layers), U, and the refreshed penultimate Z.
-        # A 1-layer net has no hidden Z loop: no q and no U gather.
+        # one (M, n_pad, C) payload each for Z_0 (gathered exactly once per
+        # step — it is static input), Z_1..Z_L, the relay aggregates q
+        # (hidden layers), U, and the refreshed penultimate Z.  A 1-layer
+        # net has no hidden Z loop (no q, no U gather) and its dual refresh
+        # reuses the already-gathered Z_0.
         dims = list(cfg.layer_dims)
-        gathered_cs = [dims[0]] + dims[1:]                # Z_0..Z_L
+        gathered_cs = [dims[0]] + dims[1:]                # Z_0 (once), Z_1..Z_L
         if cfg.num_layers >= 2:
             gathered_cs += (dims[2:]                      # q per hidden layer
                             + [dims[-1], dims[-2]])       # U, Z_{L-1} refresh
-        else:
-            gathered_cs += [dims[0]]                      # Z_0 refresh (dual)
         self.comm_stats = messages.gather_bytes(
             self.layout.neighbor_mask, self.layout.n_pad, gathered_cs,
             itemsize=2 if comm_bf16 else 4)
+        # device-resident adjacency accounting for this trainer's mode
+        self.comm_stats["adjacency"] = messages.adjacency_bytes(
+            self.layout.neighbor_mask, self.layout.n_pad)
+        self.comm_stats["adjacency"]["resident_bytes"] = \
+            int(self.data.adjacency_nbytes)
 
-        a_tilde = jnp.asarray(a_full)
-        z0_full = jnp.asarray(g.features)
-        labels = jnp.asarray(g.labels)
-        tr_mask = jnp.asarray(g.train_mask, np.float32)
-        te_mask = jnp.asarray(g.test_mask, np.float32)
-        a_blocks = self.data.a_blocks
-        nbr_f = self.data.neighbor_mask.astype(jnp.float32)
+        # full-M packed aggregation for metrics/Lagrangian: ELL in compressed
+        # mode (no dense adjacency is retained on device), masked dense
+        # einsum otherwise
+        if compressed:
+            ell = (self.data.ell_blocks, self.data.ell_indices,
+                   self.data.ell_mask)
+
+            def agg_full(z_pack):
+                from repro.kernels import ops as kops
+                return kops.community_spmm_ell(*ell, z_pack)
+        else:
+            a_blocks = self.data.a_blocks
+            nbr_f = self.data.neighbor_mask.astype(jnp.float32)
+
+            def agg_full(z_pack):
+                return jnp.einsum("mrip,rpc->mic",
+                                  a_blocks * nbr_f[:, :, None, None], z_pack)
+
+        data = self.data
+        f_act = gcn.activation_fn(cfg.activation)
+
+        def forward_packed(weights):
+            """Community-blocked forward pass — logits (M, n_pad, C_L)."""
+            z = data.z0
+            for l, w in enumerate(weights):
+                z = agg_full(z) @ w
+                if l < cfg.num_layers - 1:
+                    z = f_act(z)
+            return z
 
         @jax.jit
         def metrics(state: ParallelState):
-            logits = gcn.forward(cfg, a_tilde, z0_full, state.weights)[-1]
-            z_pen = state.zs[-2] if cfg.num_layers >= 2 else self.data.z0
-            agg = jnp.einsum("mrip,rpc->mic",
-                             a_blocks * nbr_f[:, :, None, None], z_pen)
-            res = state.zs[-1] - agg @ state.weights[-1]
-            return (gcn.accuracy(logits, labels, tr_mask),
-                    gcn.accuracy(logits, labels, te_mask),
+            logits = forward_packed(state.weights)
+            z_pen = state.zs[-2] if cfg.num_layers >= 2 else data.z0
+            res = state.zs[-1] - agg_full(z_pen) @ state.weights[-1]
+            return (gcn.accuracy(logits, data.labels, data.train_mask),
+                    gcn.accuracy(logits, data.labels, data.test_mask),
                     jnp.linalg.norm(res))
 
         self._metrics = metrics
+
+        @jax.jit
+        def lagrangian(state: ParallelState):
+            """ℒ_ρ(W, Z, U) — eq. (1) on the packed iterates; padded slots
+            carry zero adjacency/mask so this equals the global
+            subproblems.lagrangian_value on the unpacked state."""
+            ws, zs, u = state.weights, state.zs, state.u
+            logp = jax.nn.log_softmax(zs[-1], axis=-1)
+            nll = -jnp.take_along_axis(logp, data.labels[..., None],
+                                       axis=-1)[..., 0]
+            val = jnp.sum(nll * data.train_mask) / data.denom
+            z_prev = data.z0
+            for l in range(cfg.num_layers - 1):
+                r = zs[l] - f_act(agg_full(z_prev) @ ws[l])
+                val += 0.5 * admm.nu * jnp.vdot(r, r).real
+                z_prev = zs[l]
+            r = zs[-1] - agg_full(z_prev) @ ws[-1]
+            val += jnp.vdot(u, r).real + 0.5 * admm.rho * jnp.vdot(r, r).real
+            return val
+
+        self._lagrangian = lagrangian
 
     def step(self) -> None:
         self.state = self._step(self.state)
@@ -469,13 +605,15 @@ class ParallelADMMTrainer:
             jax.block_until_ready(self.state.zs[-1])
             dt = time.perf_counter() - t0
             tr, te, res = self._metrics(self.state)
+            lag = self._lagrangian(self.state)
             log.epoch.append(epoch)
             log.train_acc.append(float(tr))
             log.test_acc.append(float(te))
-            log.lagrangian.append(0.0)
+            log.lagrangian.append(float(lag))
             log.residual.append(float(res))
             log.epoch_time_s.append(dt)
             if verbose:
                 print(f"[parallel-admm] epoch {epoch:3d} train {tr:.3f} "
-                      f"test {te:.3f} res {res:.2e} ({dt*1e3:.1f} ms)")
+                      f"test {te:.3f} lagr {lag:.4f} res {res:.2e} "
+                      f"({dt*1e3:.1f} ms)")
         return log

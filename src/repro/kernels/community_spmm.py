@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: community-blocked sparse-dense matmul (Ã · Z).
+"""Pallas TPU kernels: community-blocked sparse-dense matmul (Ã · Z).
 
 The GCN ADMM hot spot is the aggregation ``Σ_r Ã_{m,r} Z_r``.  On TPU we do
 NOT port a CSR gather-SpMM (no efficient per-element gather on the VPU);
@@ -7,8 +7,16 @@ dense (n_pad × n_pad) community blocks with a (M × M) block mask — each
 present block is a dense MXU matmul on 128-aligned VMEM tiles and absent
 blocks are skipped with ``@pl.when`` (DESIGN.md §2, hardware adaptation).
 
-Grid: (row-tiles, col-tiles, M) — the community (reduction) axis is
-innermost so the output tile stays resident in VMEM across the reduction.
+Two kernels over the same math:
+
+  * ``community_spmm`` — dense (M, n_pad, n_pad) block rows + neighbour
+    mask; grid (row-tiles, col-tiles, M), the community (reduction) axis
+    innermost so the output tile stays resident in VMEM.
+  * ``community_spmm_ell`` — block-compressed (ELL) rows: only the max_deg
+    stored neighbour blocks are iterated, and the gathered Z block for
+    slot d is chosen *at DMA time* from the scalar-prefetched
+    ``ell_indices`` (PrefetchScalarGridSpec), so the reduction is O(max_deg)
+    instead of O(M) and absent/padding slots never touch the MXU.
 
   a_row:  (M, n_pad, n_pad)   this shard's row of Ã blocks
   z_all:  (M, n_pad, C)       gathered community features
@@ -80,3 +88,85 @@ def community_spmm(a_row: jax.Array, z_all: jax.Array, mask: jax.Array,
 def _vmem_scratch(shape):
     from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Block-compressed (ELL) variant: only the nnz blocks are materialized.
+#
+# The lane's neighbour blocks arrive pre-gathered in ELL form — row m holds
+# its max_deg neighbour blocks plus padding — so the reduction axis is
+# max_deg (~constant on power-law community graphs) instead of M.  The
+# gathered feature block to multiply against is *data-dependent*
+# (z_all[ell_indices[m, d]]): ``ell_indices`` is scalar-prefetched so the
+# BlockSpec index_map can steer the Z DMA before the body runs, and padding
+# slots (ell_mask == 0) skip the MXU work with ``@pl.when`` — the same
+# predication trick as the dense kernel's absent-block skip.
+# ---------------------------------------------------------------------------
+
+
+def _spmm_ell_kernel(idx_ref, msk_ref, a_ref, z_ref, o_ref, acc_scr):
+    m = pl.program_id(0)
+    d = pl.program_id(3)
+    n_d = pl.num_programs(3)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(msk_ref[m, d] != 0)
+    def _accum():
+        a = a_ref[...]                       # (tile_n, n_pad)
+        z = z_ref[...]                       # (n_pad, tile_c)
+        acc_scr[...] += jnp.dot(a, z, preferred_element_type=jnp.float32)
+
+    @pl.when(d == n_d - 1)
+    def _write():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_c", "interpret"))
+def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
+                       ell_mask: jax.Array, z_all: jax.Array,
+                       *, tile_n: int = DEFAULT_TILE_N,
+                       tile_c: int = DEFAULT_TILE_C,
+                       interpret: bool = False) -> jax.Array:
+    """Σ_d mask[m,d] · blocks[m,d] @ z_all[idx[m,d]] — O(nnz·n_pad²·C).
+
+    ell_blocks:  (k, max_deg, n_pad, n_pad) — a shard's ELL rows
+    ell_indices: (k, max_deg) int32 global community ids into z_all
+    ell_mask:    (k, max_deg) — nonzero = real block, 0 = padding slot
+    z_all:       (M, n_pad, C) gathered community features
+    returns      (k, n_pad, C)
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    k, max_deg, n_pad, _ = ell_blocks.shape
+    c = z_all.shape[-1]
+    tile_n = min(tile_n, n_pad)
+    tile_c = min(tile_c, c)
+    while n_pad % tile_n:
+        tile_n //= 2
+    while c % tile_c:
+        tile_c //= 2
+
+    grid = (k, n_pad // tile_n, c // tile_c, max_deg)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # ell_indices, ell_mask (SMEM)
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, tile_n, n_pad),
+                         lambda m, i, j, d, idx, msk: (m, d, i, 0)),
+            pl.BlockSpec((None, n_pad, tile_c),
+                         lambda m, i, j, d, idx, msk: (idx[m, d], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((None, tile_n, tile_c),
+                               lambda m, i, j, d, idx, msk: (m, i, j)),
+        scratch_shapes=[pltpu.VMEM((tile_n, tile_c), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _spmm_ell_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, n_pad, c), z_all.dtype),
+        interpret=interpret,
+    )(ell_indices.astype(jnp.int32), ell_mask.astype(jnp.int32),
+      ell_blocks, z_all)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.community_spmm import community_spmm as _spmm_kernel
+from repro.kernels.community_spmm import community_spmm_ell as _spmm_ell_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
 
@@ -58,14 +59,25 @@ def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
     """Block-compressed aggregation: Σ_{d} Ã[m,d] Z[idx[m,d]] over the ELL
     view (graph.BlockCSR) — FLOPs and memory are O(nnz·n_pad²·C), not M².
 
-    ell_blocks:  (M, max_deg, n_pad, n_pad)
-    ell_indices: (M, max_deg) int32
-    ell_mask:    (M, max_deg) — 1 for real blocks, 0 for padding
+    On TPU this is the lane-aware Pallas kernel (scalar-prefetched indices
+    steer the Z-block DMA; padding slots are skipped with ``@pl.when``); on
+    CPU the gather-einsum oracle runs instead, and tests route through the
+    interpret-mode kernel body via ``repro_force_interpret``.
+
+    ell_blocks:  (k, max_deg, n_pad, n_pad) — a shard's ELL rows (k = M on
+                 the full layout, k = M/n_shards inside shard_map)
+    ell_indices: (k, max_deg) int32 — global community ids into z_all
+    ell_mask:    (k, max_deg) — 1 for real blocks, 0 for padding
     z_all:       (M, n_pad, C)
-    returns      (M, n_pad, C)
+    returns      (k, n_pad, C)
     """
-    z_g = z_all[ell_indices] * ell_mask[..., None, None].astype(z_all.dtype)
-    return jnp.einsum("mdip,mdpc->mic", ell_blocks, z_g)
+    if _on_tpu():
+        return _spmm_ell_kernel(ell_blocks, ell_indices, ell_mask, z_all)
+    if _FORCE_INTERPRET:
+        return _spmm_ell_kernel(ell_blocks, ell_indices, ell_mask, z_all,
+                                interpret=True)
+    return ref.community_spmm_ell_einsum(ell_blocks, ell_indices, ell_mask,
+                                         z_all)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -12,6 +12,15 @@ def community_spmm_ref(a_row: jax.Array, z_all: jax.Array,
     return jnp.einsum("rip,rpc->ic", masked, z_all)
 
 
+def community_spmm_ell_einsum(ell_blocks: jax.Array, ell_indices: jax.Array,
+                              ell_mask: jax.Array,
+                              z_all: jax.Array) -> jax.Array:
+    """Gather-einsum form of the ELL aggregation — the CPU dispatch path and
+    the vectorized allclose target for the Pallas ELL kernel."""
+    z_g = z_all[ell_indices] * ell_mask[..., None, None].astype(z_all.dtype)
+    return jnp.einsum("mdip,mdpc->mic", ell_blocks, z_g)
+
+
 def community_spmm_ell_ref(ell_blocks: jax.Array, ell_indices: jax.Array,
                            ell_mask: jax.Array, z_all: jax.Array) -> jax.Array:
     """Loop oracle for the block-compressed (ELL) aggregation."""

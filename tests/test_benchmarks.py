@@ -1,0 +1,63 @@
+"""CI smoke for the benchmark JSON emitters: --quick runs must produce
+machine-readable BENCH_*.json payloads with the (mode, M, bytes,
+per-epoch seconds) fields the perf trajectory tracking consumes."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_bench(script: str, out_path: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", script),
+         "--quick", "--out", out_path],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    with open(out_path) as fh:
+        return json.load(fh)
+
+
+def test_block_sparsity_quick_json(tmp_path):
+    payload = _run_bench("block_sparsity.py",
+                         str(tmp_path / "BENCH_block_sparsity.json"))
+    assert payload["quick"] is True
+    assert payload["agg_sweep"] and payload["trainer_sweep"]
+    modes = {r["mode"] for r in payload["trainer_sweep"]}
+    assert modes == {"dense", "compressed"}
+    for r in payload["trainer_sweep"]:
+        assert {"mode", "M", "adjacency_bytes", "per_epoch_s"} <= set(r)
+        assert r["adjacency_bytes"] > 0 and r["per_epoch_s"] > 0
+    # compressed adjacency tracks nnz blocks: at small M a near-dense block
+    # graph only pays the tiny index/mask overhead, and at the largest M of
+    # the sweep the compressed form must already be strictly smaller
+    by_m = {}
+    for r in payload["trainer_sweep"]:
+        by_m.setdefault(r["M"], {})[r["mode"]] = r["adjacency_bytes"]
+    for m, d in by_m.items():
+        assert d["compressed"] <= d["dense"] * 1.01 + 4096, (m, d)
+    top = by_m[max(by_m)]
+    assert top["compressed"] < top["dense"], top
+
+
+@pytest.mark.slow
+def test_speedup_quick_json(tmp_path):
+    payload = _run_bench("speedup.py", str(tmp_path / "BENCH_speedup.json"))
+    assert payload["quick"] is True
+    modes = {r["mode"] for r in payload["rows"]}
+    assert modes == {"parallel", "compressed"}
+    for r in payload["rows"]:
+        assert {"mode", "dataset", "adjacency_bytes",
+                "parallel_per_epoch_s", "serial_per_epoch_s"} <= set(r)
+        assert r["parallel_per_epoch_s"] > 0
+    comp = next(r for r in payload["rows"] if r["mode"] == "compressed")
+    par = next(r for r in payload["rows"] if r["mode"] == "parallel")
+    # M=3 on an SBM graph is block-dense, so ELL only adds its small
+    # index/mask overhead here; the compression win is block_sparsity.py's
+    # power-law M-sweep
+    assert comp["adjacency_bytes"] <= par["adjacency_bytes"] * 1.01

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.community_spmm import community_spmm
+from repro.kernels.community_spmm import community_spmm, community_spmm_ell
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -53,6 +53,60 @@ def test_community_spmm_skips_masked_blocks():
                                rtol=1e-5, atol=1e-5)
     # and differs from the unmasked product
     full = ref.community_spmm_ref(a, z, jnp.asarray([True] * 3))
+    assert np.abs(np.asarray(out) - np.asarray(full)).max() > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# community_spmm_ell (block-compressed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m_z,k,max_deg,n_pad,c", [
+    (6, 6, 3, 64, 32),      # full layout (k == M)
+    (8, 2, 4, 64, 48),      # shard slice (k < M, global indices)
+    (4, 4, 1, 128, 128),    # single-neighbour rows
+    (5, 5, 5, 72, 20),      # ragged: many padding lanes
+])
+def test_community_spmm_ell_matches_oracles(m_z, k, max_deg, n_pad, c):
+    """Interpret-mode Pallas ELL kernel vs the einsum and loop oracles,
+    with real max_deg padding lanes (mask 0, index 0) in the mix."""
+    rng = np.random.default_rng(0)
+    blocks = rng.normal(size=(k, max_deg, n_pad, n_pad)).astype(np.float32)
+    idx = rng.integers(0, m_z, size=(k, max_deg)).astype(np.int32)
+    # variable fan-in: row r keeps 1 + (r % max_deg) real slots
+    mask = np.zeros((k, max_deg), np.float32)
+    for r in range(k):
+        mask[r, : 1 + r % max_deg] = 1.0
+    z = rng.normal(size=(m_z, n_pad, c)).astype(np.float32)
+
+    args = (jnp.asarray(blocks), jnp.asarray(idx), jnp.asarray(mask),
+            jnp.asarray(z))
+    out = community_spmm_ell(*args, interpret=True)
+    expect = ref.community_spmm_ell_einsum(*args)
+    loop = ref.community_spmm_ell_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(loop), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_community_spmm_ell_skips_padding_lanes():
+    """Padding slots (mask 0) must not contribute even though they point at
+    real z rows (index 0) and hold nonzero block data."""
+    rng = np.random.default_rng(3)
+    k, max_deg, n_pad, c = 3, 3, 64, 16
+    blocks = jnp.asarray(rng.normal(size=(k, max_deg, n_pad, n_pad))
+                         .astype(np.float32))
+    idx = jnp.zeros((k, max_deg), jnp.int32)
+    mask = jnp.asarray([[1, 0, 0], [1, 1, 0], [1, 1, 1]], jnp.float32)
+    z = jnp.asarray(rng.normal(size=(4, n_pad, c)).astype(np.float32))
+
+    out = community_spmm_ell(blocks, idx, mask, z, interpret=True)
+    expect = ref.community_spmm_ell_einsum(blocks, idx, mask, z)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    # and differs from the all-real-slot product
+    full = ref.community_spmm_ell_einsum(blocks, idx,
+                                         jnp.ones_like(mask), z)
     assert np.abs(np.asarray(out) - np.asarray(full)).max() > 1e-3
 
 

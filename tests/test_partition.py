@@ -65,6 +65,56 @@ def test_neighbor_mask_matches_blocks(g):
     assert (layout.neighbor_mask >= nonzero).all()
 
 
+def test_partition_deterministic_golden(g):
+    """The deque+seen-set BFS must reproduce the exact partitions the old
+    list.pop(0) frontier produced (checksums captured before the switch):
+    a node is assigned at its earliest enqueue position either way."""
+    golden = {
+        (3, 0): (1530, 165707, 6968),
+        (4, 0): (2296, 796806, 6035),
+        (3, 1): (1530, 185447, 6893),
+        (6, 2): (3825, 890231, 8711),
+    }
+    for (m, seed), (tot, chk, cut) in golden.items():
+        part = graph.partition_graph(g.num_nodes, g.edges, m, seed=seed)
+        got = (int(part.sum()),
+               int((part * np.arange(len(part))).sum() % 1000003),
+               graph.edge_cut(g.edges, part))
+        assert got == (tot, chk, cut), (m, seed, got)
+
+
+def test_partition_scales_linearly_in_frontier():
+    """BFS growth must not blow up on graphs where the old O(frontier) pop
+    and duplicate re-enqueue were quadratic — a star-ish graph whose hub
+    floods the frontier with every neighbour at once."""
+    n = 20000
+    hub_edges = np.stack([np.zeros(n - 1, np.int64),
+                          np.arange(1, n, dtype=np.int64)], axis=1)
+    ring = np.stack([np.arange(n, dtype=np.int64),
+                     np.roll(np.arange(n, dtype=np.int64), -1)], axis=1)
+    edges = np.concatenate([hub_edges, ring]).astype(np.int32)
+    part = graph.partition_graph(n, edges, 4, seed=0, refine_iters=1)
+    sizes = np.bincount(part, minlength=4)
+    assert (sizes > 0).all() and sizes.max() <= int(np.ceil(n / 4))
+
+
+def test_blockcsr_shard_slice_covers_all_rows():
+    g2, part = graph.synthetic_powerlaw_communities(
+        num_parts=6, nodes_per_part=16, attach=1, seed=0, feat_dim=4)
+    layout = graph.build_community_layout(g2.num_nodes, g2.edges, part,
+                                          compressed=True)
+    csr = layout.compress()
+    for n_shards in (1, 2, 3, 6):
+        blocks = np.concatenate(
+            [csr.shard_slice(s, n_shards)[0] for s in range(n_shards)])
+        idx = np.concatenate(
+            [csr.shard_slice(s, n_shards)[1] for s in range(n_shards)])
+        np.testing.assert_array_equal(blocks, csr.ell_blocks)
+        np.testing.assert_array_equal(idx, csr.ell_indices)
+    with pytest.raises(ValueError):
+        csr.shard_slice(0, 4)       # 6 rows don't split into 4 shards
+
+
 def test_sbm_statistics():
     g = graph.synthetic_sbm("amazon_photo_mini", seed=0)
     n, n_train, n_test, k, c0, _ = graph.DATASET_STATS["amazon_photo_mini"]
