@@ -30,7 +30,6 @@ def run(dataset: str = "amazon_photo_mini", epochs: int = 50,
           f"{log.train_acc[-1]:.3f} test {log.test_acc[-1]:.3f}")
 
     if include_parallel:
-        import jax
         from repro.core.parallel import ParallelADMMTrainer
         ptr = ParallelADMMTrainer(cfg, admm, g, num_parts=3, seed=0)
         plog = ptr.train(epochs)

@@ -89,7 +89,13 @@ def sweep(ms=(4, 8, 16, 32), nodes_per_part: int = 32, c: int = 64,
         flops_sparse = 2.0 * nnz * n_pad * n_pad * c
         comm = messages.gather_bytes(layout.neighbor_mask, n_pad, [c])
         adj = messages.adjacency_bytes(layout.neighbor_mask, n_pad)
-        coll = collective_terms(comm["full_bytes"], comm["needed_bytes"])
+        # scheduled p2p wire volume at one agent per community (the paper's
+        # deployment): ppermute rounds move true rows + round padding
+        plan = messages.build_neighbor_exchange(layout.neighbor_mask, m,
+                                                n_pad)
+        wire = messages.exchange_bytes(plan, [c])
+        coll = collective_terms(comm["full_bytes"], comm["needed_bytes"],
+                                wire["wire_bytes"])
         rows.append({
             "M": m, "n_pad": n_pad, "nnz": nnz,
             "density": nnz / dense_blocks,
@@ -100,9 +106,14 @@ def sweep(ms=(4, 8, 16, 32), nodes_per_part: int = 32, c: int = 64,
             "gflops_sparse": flops_sparse / 1e9,
             "coll_full_kb": comm["full_bytes"] / 1e3,
             "coll_needed_kb": comm["needed_bytes"] / 1e3,
+            "coll_wire_kb": wire["wire_bytes"] / 1e3,
+            "coll_padding_kb": wire["padding_bytes"] / 1e3,
+            "p2p_rounds": wire["num_rounds"],
             "coll_s_full": coll["collective_s"],
             "coll_s_needed": coll["collective_sparse_s"],
+            "coll_s_wire": coll["collective_wire_s"],
             "coll_savings": coll["collective_savings"],
+            "coll_wire_savings": coll["collective_wire_savings"],
             "adj_dense_bytes": adj["dense_bytes"],
             "adj_ell_bytes": adj["ell_bytes"],
             "max_deg": adj["max_deg"],
@@ -155,21 +166,25 @@ def main(quick: bool = False, out: "str | None" = None):
     hdr = (f"{'M':>3s} {'nnz':>4s} {'dens':>5s} {'mem':>5s} "
            f"{'dense_ms':>9s} {'masked_ms':>10s} {'ell_ms':>7s} "
            f"{'GF_dense':>9s} {'GF_nnz':>7s} {'coll_full':>10s} "
-           f"{'coll_need':>10s}")
+           f"{'coll_need':>10s} {'coll_wire':>10s}")
     print(hdr)
     for r in rows:
         print(f"{r['M']:3d} {r['nnz']:4d} {r['density']:5.2f} "
               f"{r['mem_ratio']:5.2f} {r['t_dense_ms']:9.3f} "
               f"{r['t_masked_ms']:10.3f} {r['t_ell_ms']:7.3f} "
               f"{r['gflops_dense']:9.3f} {r['gflops_sparse']:7.3f} "
-              f"{r['coll_full_kb']:9.1f}k {r['coll_needed_kb']:9.1f}k")
+              f"{r['coll_full_kb']:9.1f}k {r['coll_needed_kb']:9.1f}k "
+              f"{r['coll_wire_kb']:9.1f}k")
     big = rows[-1]
     print(f"\nAt M={big['M']}: sparse path does {big['density']:.0%} of the "
           f"dense blocks — FLOPs {big['gflops_sparse']:.3f} vs "
           f"{big['gflops_dense']:.3f} GF, ELL time {big['t_ell_ms']:.3f} vs "
           f"dense {big['t_dense_ms']:.3f} ms, collective "
-          f"{big['coll_needed_kb']:.0f}k vs {big['coll_full_kb']:.0f}k bytes "
-          f"per gather round.")
+          f"{big['coll_wire_kb']:.0f}k scheduled p2p wire "
+          f"({big['p2p_rounds']} ppermute rounds) vs {big['coll_needed_kb']:.0f}k "
+          f"needed vs {big['coll_full_kb']:.0f}k all-gather bytes per round.")
+    # the p2p schedule must move no more than the mask-derived need
+    assert all(r["coll_wire_kb"] <= r["coll_needed_kb"] for r in rows)
     # nnz grows ~linearly in M on the power-law topology: the sparse-path
     # cost per M must grow far slower than the dense M² path
     m0, m1 = rows[0], rows[-1]

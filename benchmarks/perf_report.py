@@ -5,7 +5,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.mesh import ICI_BW, PEAK_FLOPS
 
 RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 

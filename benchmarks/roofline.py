@@ -26,18 +26,26 @@ MOVE_NOTES = {
 
 
 def collective_terms(full_bytes: float,
-                     needed_bytes: float | None = None) -> dict:
+                     needed_bytes: float | None = None,
+                     wire_bytes: float | None = None) -> dict:
     """Collective roofline term, with the block-sparse (neighbour-only)
     volume when known.  The GCN parallel trainer records ``comm_stats``
     (core/messages.gather_bytes): an all-gather transport moves
-    ``full_bytes`` per iteration, a neighbour-aware exchange only
-    ``needed_bytes`` — the ratio is nnz(neighbour blocks)/M².
+    ``full_bytes`` per iteration, the masks bound the neighbour-only need
+    at ``needed_bytes`` (ratio nnz(neighbour blocks)/M²), and the p2p
+    ``ppermute`` schedule actually moves ``wire_bytes`` (true scheduled
+    rows + round padding, core/messages.exchange_bytes) — the volume the
+    collective term should be priced at when the p2p transport runs.
     """
     out = {"collective_s": full_bytes / ICI_BW}
     if needed_bytes is not None:
         out["collective_sparse_s"] = needed_bytes / ICI_BW
         out["collective_savings"] = 1.0 - (
             needed_bytes / full_bytes if full_bytes else 0.0)
+    if wire_bytes is not None:
+        out["collective_wire_s"] = wire_bytes / ICI_BW
+        out["collective_wire_savings"] = 1.0 - (
+            wire_bytes / full_bytes if full_bytes else 0.0)
     return out
 
 
@@ -48,14 +56,17 @@ def analyze(path: Path) -> dict:
     hbm_hi = census["hbm_bytes"]
     hbm_lo = r.get("analytic_hbm_bytes", hbm_hi)
     coll = census["collective_bytes"]
-    coll_t = collective_terms(coll, r.get("collective_needed_bytes"))
+    coll_t = collective_terms(coll, r.get("collective_needed_bytes"),
+                              r.get("collective_wire_bytes"))
     terms = {
         "compute_s": flops / PEAK_FLOPS,
         "memory_lo_s": hbm_lo / HBM_BW,
         "memory_hi_s": hbm_hi / HBM_BW,
-        # neighbour-aware volume when the run recorded one (GCN trainer)
-        "collective_s": coll_t.get("collective_sparse_s",
-                                   coll_t["collective_s"]),
+        # scheduled p2p wire volume when the run recorded one, else the
+        # mask-derived neighbour bound, else the raw census (GCN trainer)
+        "collective_s": coll_t.get(
+            "collective_wire_s", coll_t.get("collective_sparse_s",
+                                            coll_t["collective_s"])),
         "collective_dense_s": coll_t["collective_s"],
     }
     # dominant term: memory judged by its analytic floor (the census bound

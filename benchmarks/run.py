@@ -10,15 +10,24 @@ results/bench/*.json.
 
 Run everything: ``PYTHONPATH=src python -m benchmarks.run``
 Subset:         ``... -m benchmarks.run --only table3_speedup,roofline``
+CI smoke:       ``... benchmarks/run.py --quick`` — emits the repo-root
+``BENCH_block_sparsity.json`` / ``BENCH_speedup.json`` quick payloads and
+validates them with benchmarks/check_bench.py (schema + the compressed-vs-
+dense adjacency and p2p-vs-allgather wire-byte regression guards).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
-OUT_DIR = Path(__file__).resolve().parents[1] / "results" / "bench"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:       # allow `python benchmarks/run.py`
+    sys.path.insert(0, str(REPO_ROOT))
+
+OUT_DIR = REPO_ROOT / "results" / "bench"
 
 
 def bench_table3_speedup() -> list[tuple[str, float, str]]:
@@ -147,11 +156,27 @@ BENCHES = {
 }
 
 
+def quick() -> None:
+    """CI smoke: quick BENCH_*.json emission + schema/regression checks."""
+    from benchmarks import block_sparsity, check_bench, speedup
+    block_sparsity.main(quick=True)
+    speedup.main(quick=True)
+    check_bench.main()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benches")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: quick BENCH_*.json + check_bench")
     args = ap.parse_args()
+    if args.quick:
+        if args.only:
+            ap.error("--quick runs a fixed smoke set; drop --only or run "
+                     "the subset without --quick")
+        quick()
+        return
     names = args.only.split(",") if args.only else list(BENCHES)
     OUT_DIR.mkdir(parents=True, exist_ok=True)
 

@@ -46,8 +46,10 @@ WORKER = textwrap.dedent("""
         adjacency_bytes = int(tr.a_tilde.nbytes)
     else:
         from repro.core.parallel import ParallelADMMTrainer
+        transport = "p2p" if mode == "p2p" else "allgather"
         tr = ParallelADMMTrainer(cfg, admm, g, num_parts=3, seed=0,
-                                 compressed=(mode == "compressed"))
+                                 compressed=(mode in ("compressed", "p2p")),
+                                 transport=transport)
         step = tr.step
         adjacency_bytes = int(tr.data.adjacency_nbytes)
     step(); jax.block_until_ready(tr.state.zs[-1])   # compile
@@ -64,12 +66,17 @@ WORKER = textwrap.dedent("""
         lowered = tr._step.lower(tr.state)
     census = roofline.hlo_census(lowered.compile().as_text())
     acc = tr._metrics(tr.state)
+    comm = {}
+    if mode != "serial":
+        comm = {"scheduled_wire_bytes": int(tr.comm_stats["wire_bytes"]),
+                "needed_bytes": int(tr.comm_stats["needed_bytes"]),
+                "full_bytes": int(tr.comm_stats["full_bytes"])}
     print(json.dumps({"mode": mode, "total_s": total,
                       "per_epoch_s": total / epochs,
                       "per_device_flops": float(census.flops),
                       "collective_bytes": float(census.collective_bytes),
                       "adjacency_bytes": adjacency_bytes,
-                      "test_acc": float(acc[1])}))
+                      "test_acc": float(acc[1]), **comm}))
 """)
 
 
@@ -90,7 +97,7 @@ def run(epochs: int = 20, hidden: int = 256,
     rows = []
     for ds in datasets:
         serial = _run("serial", ds, epochs, hidden)
-        for mode in ("parallel", "compressed"):
+        for mode in ("parallel", "compressed", "p2p"):
             parallel = _run(mode, ds, epochs, hidden)
             speedup = serial["total_s"] / parallel["total_s"]
             # analytic speedup: per-agent compute ratio from the HLO census —
@@ -109,6 +116,8 @@ def run(epochs: int = 20, hidden: int = 256,
                 "speedup": round(speedup, 2),
                 "analytic_compute_speedup": round(flops_ratio, 2),
                 "parallel_collective_bytes": parallel["collective_bytes"],
+                "scheduled_wire_bytes": parallel.get("scheduled_wire_bytes"),
+                "comm_full_bytes": parallel.get("full_bytes"),
                 "adjacency_bytes": parallel["adjacency_bytes"],
                 "serial_adjacency_bytes": serial["adjacency_bytes"],
                 "serial_test_acc": round(serial["test_acc"], 3),
@@ -122,12 +131,44 @@ def run(epochs: int = 20, hidden: int = 256,
     return rows
 
 
+def wire_comparison(m: int = 32, hidden: int = 64) -> dict:
+    """Analytic transport comparison at M communities, one agent each (the
+    paper's deployment, past what this container can host as devices):
+    all-gather full volume vs mask-derived need vs the scheduled p2p wire
+    (ppermute rounds: true rows + round padding, messages.exchange_bytes).
+    """
+    from repro.core import graph, messages
+    g, part = graph.synthetic_powerlaw_communities(
+        m, nodes_per_part=32, attach=2, seed=0, feat_dim=hidden)
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True)
+    stats = messages.gather_bytes(layout.neighbor_mask, layout.n_pad,
+                                  [hidden])
+    plan = messages.build_neighbor_exchange(layout.neighbor_mask, m,
+                                            layout.n_pad)
+    stats.update(messages.exchange_bytes(plan, [hidden]))
+    messages.verify_transport_bytes(stats)
+    out = {"M": m,
+           "full_bytes": stats["full_bytes"],
+           "needed_bytes": stats["needed_bytes"],
+           "wire_bytes": stats["wire_bytes"],
+           "padding_bytes": stats["padding_bytes"],
+           "p2p_rounds": stats["num_rounds"],
+           "wire_reduction": round(
+               1.0 - stats["wire_bytes"] / stats["full_bytes"], 4)}
+    print(f"[speedup] M={m} transport volume/iteration-payload: all-gather "
+          f"{out['full_bytes']/1e3:.0f}kB -> p2p wire "
+          f"{out['wire_bytes']/1e3:.0f}kB over {out['p2p_rounds']} ppermute "
+          f"rounds ({out['wire_reduction']:.0%} reduction)")
+    return out
+
+
 def main(quick: bool = False, out: "str | None" = None):
     if quick:
         rows = run(epochs=2, hidden=32, datasets=("amazon_photo_mini",))
     else:
         rows = run()
-    payload = {"quick": quick, "rows": rows}
+    payload = {"quick": quick, "rows": rows, "m32_wire": wire_comparison()}
     out_path = pathlib.Path(out) if out else \
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_speedup.json"
     out_path.write_text(json.dumps(payload, indent=2))

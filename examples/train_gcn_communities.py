@@ -33,6 +33,11 @@ def main():
     ap.add_argument("--use-kernel", action="store_true",
                     help="route aggregation through the Pallas kernels "
                          "(TPU; set REPRO_PALLAS_INTERPRET=1 elsewhere)")
+    ap.add_argument("--transport", default=None,
+                    choices=["p2p", "allgather"],
+                    help="Z/U/q exchange: neighbour-only ppermute rounds "
+                         "(p2p, default with --compressed) or the masked "
+                         "all-gather oracle (default otherwise)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -51,14 +56,17 @@ def main():
     trainer = ParallelADMMTrainer(cfg, admm, g, num_parts=args.parts,
                                   seed=0, comm_bf16=args.comm_bf16,
                                   compressed=args.compressed,
-                                  use_kernel=args.use_kernel)
+                                  use_kernel=args.use_kernel,
+                                  transport=args.transport)
     print(f"mesh: {dict(trainer.mesh.shape)}; neighbour topology:\n"
           f"{np.asarray(trainer.data.neighbor_mask).astype(int)}")
     cs = trainer.comm_stats
-    print(f"collective/iter: full {cs['full_bytes'] / 1e6:.2f} MB, "
-          f"neighbour-only {cs['needed_bytes'] / 1e6:.2f} MB "
+    print(f"collective/iter [{cs['transport']}]: full "
+          f"{cs['full_bytes'] / 1e6:.2f} MB, neighbour-only "
+          f"{cs['needed_bytes'] / 1e6:.2f} MB "
           f"({cs['nnz_blocks']}/{cs['dense_blocks']} blocks, "
-          f"{100 * cs['savings_ratio']:.0f}% saved)")
+          f"{100 * cs['savings_ratio']:.0f}% saved), scheduled wire "
+          f"{cs['wire_bytes'] / 1e6:.2f} MB")
     adj = cs["adjacency"]
     mode = "compressed (ELL)" if args.compressed else "dense"
     print(f"adjacency on device [{mode}]: {adj['resident_bytes'] / 1e6:.2f} "

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import ModelConfig
 
 _ARCH_MODULES = {
     "deepseek-v3-671b": "deepseek_v3_671b",

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 
@@ -126,6 +125,40 @@ def partition_graph(num_nodes: int, edges: Array, num_parts: int,
 
 def edge_cut(edges: Array, part: Array) -> int:
     return int(np.sum(part[edges[:, 0]] != part[edges[:, 1]]))
+
+
+def shard_neighbor_graph(neighbor_mask: Array, n_shards: int
+                         ) -> tuple[list[Array], Array]:
+    """Lift the community topology to the mesh-shard level.
+
+    With communities laid out community-major (``BlockCSR.shard_slice``),
+    shard ``s`` hosts lanes ``[s·k, (s+1)·k)`` and its subproblems read the
+    payload rows ``r ∈ ∪_{m∈lanes(s)} N_m ∪ {m}`` — the per-shard union of
+    the ELL neighbour indices.  Returns:
+
+      * ``needed``: per shard, the sorted global community ids it must hold
+        (its own lanes always included — they are resident, not wired);
+      * ``shard_adj``: (n_shards, n_shards) bool, ``[dst, src]`` True when
+        ``dst`` needs at least one community hosted on ``src`` (diagonal
+        excluded) — the shard-to-shard edge set a point-to-point transport
+        schedules over.
+    """
+    nbr = np.asarray(neighbor_mask, bool)
+    m = nbr.shape[0]
+    if n_shards <= 0 or m % n_shards:
+        raise ValueError(f"M={m} not divisible by n_shards={n_shards}")
+    k = m // n_shards
+    needed: list[Array] = []
+    shard_adj = np.zeros((n_shards, n_shards), dtype=bool)
+    for s in range(n_shards):
+        rows = nbr[s * k:(s + 1) * k].any(axis=0)
+        rows[s * k:(s + 1) * k] = True          # own lanes: resident
+        ids = np.flatnonzero(rows).astype(np.int32)
+        needed.append(ids)
+        src_shards = np.unique(ids // k)
+        shard_adj[s, src_shards] = True
+        shard_adj[s, s] = False
+    return needed, shard_adj
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,7 +26,6 @@ fixed batch (the paper's full-batch regime).  Embedding inputs Z_0 are the
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax

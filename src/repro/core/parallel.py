@@ -15,11 +15,33 @@ One ADMM iteration is a single ``shard_map``-ed program:
     still line-search independently); Z_L via per-community FISTA (eq. 7).
   * U update — local dual ascent (eq. 3).
 
-Communication per iteration = all-gathers of Z/U/q (the roofline
-'collective' term); the paper's p/s messages are exactly the gathered relay
-aggregates, see messages.py.  Z_0 is static input — it is gathered exactly
-once per iteration and reused by every consumer (layer-1 input and the
-1-layer dual refresh).
+Communication per iteration (the roofline 'collective' term) is one
+exchange of Z/U/q per consumer round; the paper's p/s messages are exactly
+the relayed aggregates, see messages.py.  Z_0 is static input — it is
+exchanged exactly once per iteration and reused by every consumer (layer-1
+input and the 1-layer dual refresh).  Two transports (``transport`` flag):
+
+  * allgather — ``lax.all_gather`` moves every shard's payload to every
+    shard, then masks to the neighbour rows.  The only transport the dense
+    adjacency supports (its Z-coupling reads all M rows), and the parity
+    oracle for p2p.
+  * p2p (default for ``compressed=True``) — neighbour-only exchange over a
+    static round schedule (messages.NeighborExchange): the community
+    topology is lifted to shard-to-shard edges (per-shard union of the ELL
+    neighbour indices, graph.shard_neighbor_graph), messages are coloured
+    into ``lax.ppermute`` rounds by ring offset (sharding.partition.
+    ring_round_coloring — each round is a partial permutation, inactive
+    offsets are skipped), and each round moves a padded
+    ``(rows_pad, n_pad, C)`` send buffer.  Every shard receives only the
+    lane-major ``(r_pad, n_pad, C)`` buffer of rows its subproblems
+    actually read — no ``(M, n_pad, C)`` gathered tensor is materialised —
+    and the ELL indices are remapped host-side to receive-buffer slots.
+    ``comm_stats`` records the scheduled ``wire_bytes`` ==
+    true rows + round padding ≤ the all-gather ``full_bytes``, with the
+    true rows bounded by the mask-derived ``needed_bytes`` (verified at
+    construction by messages.verify_transport_bytes; with one community
+    per shard the bound holds padding-included and the CI benchmark
+    guards assert it strictly).
 
 Adjacency representations (``compressed`` flag):
 
@@ -253,13 +275,18 @@ def fista_lanes(admm: ADMMConfig, b, u, labels, mask, z_init, denom):
 
 def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                     comm_bf16: bool, compressed: bool,
+                    plan: "messages.NeighborExchange | None",
                     adj, nbr_row, z0_loc, labels_loc, mask_loc, denom,
                     ws, zs_loc, u_loc, taus, thetas):
     """Shapes per shard: nbr_row (k,M); z*_loc (k,n,C); thetas[l] (k,).
 
     ``adj`` is the shard's adjacency rows — dense mode: a_row (k,M,n,n);
     compressed mode: (ell_rows (k,max_deg,n,n), ell_idx (k,max_deg),
-    ell_msk (k,max_deg)) with *global* community ids in ell_idx.
+    ell_msk (k,max_deg)).  ``plan`` selects the transport: None means
+    all-gather (ell_idx holds *global* community ids into the gathered
+    (M,n,C) payload); a NeighborExchange means neighbour-only ppermute
+    rounds (ell_idx is pre-remapped to slots of the (r_pad,n,C) receive
+    buffer, and no (M,n,C) tensor exists in this body).
     """
     f = gcn.activation_fn(cfg.activation)
     num_layers = cfg.num_layers
@@ -299,34 +326,32 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
             return jnp.einsum("kmip,mpc->kic",
                               a_row * nbrf[:, :, None, None], zh)
 
-    def gather(x_loc, neighbors_only: bool = True):
-        """(k, n, C) local -> (M, n, C) global (community-major order).
+    if plan is not None:
+        def gather(x_loc):
+            """p2p transport: (k, n, C) local -> (r_pad, n, C) neighbour
+            receive buffer via the static ppermute round schedule.  Only
+            the rows this shard's subproblems read ever hit the wire (plus
+            round padding); consumers index the buffer through the
+            pre-localized ELL slots."""
+            return messages.exchange_neighbors(plan, x_loc, AXIS,
+                                               comm_bf16=comm_bf16)
+    else:
+        def gather(x_loc):
+            """allgather transport: (k, n, C) local -> (M, n, C) global
+            (community-major order), masked down to the rows
+            r ∈ ∪_lanes N_m that this shard's subproblems actually read —
+            the mask documents/verifies the needed volume the p2p transport
+            realizes (``ParallelADMMTrainer.comm_stats``).
 
-        ``neighbors_only`` masks the gathered payload down to the rows
-        r ∈ ∪_lanes N_m that this shard's subproblems actually read — the
-        paper's neighbour-only exchange.  (On an all-gather transport the
-        masking documents/verifies the needed volume; the recorded stats in
-        ``ParallelADMMTrainer.comm_stats`` quantify the byte savings a
-        point-to-point transport realizes.)
-
-        With ``comm_bf16`` the paper's p/s message payloads travel in bf16
-        (half the collective bytes; §Perf) and are restored to f32 for the
-        local subproblem math.  The bf16 value is carried through the
-        collective as uint16 — a plain convert gets hoisted back to f32 by
-        XLA's convert-mover, silently undoing the compression (§Perf log)."""
-        dt = x_loc.dtype
-        if comm_bf16 and dt == jnp.float32:
-            wire = jax.lax.bitcast_convert_type(
-                x_loc.astype(jnp.bfloat16), jnp.uint16)
-            g = jax.lax.all_gather(wire, AXIS)
-            g = jax.lax.bitcast_convert_type(g, jnp.bfloat16)
-            g = g.reshape((m_total,) + x_loc.shape[1:]).astype(dt)
-        else:
-            g = jax.lax.all_gather(x_loc, AXIS)  # (n_shards, k, n, C)
+            With ``comm_bf16`` the paper's p/s message payloads travel in
+            bf16 (half the collective bytes; §Perf; messages.bf16_wire) and
+            are restored to f32 for the local subproblem math."""
+            dt = x_loc.dtype
+            gather_all = partial(jax.lax.all_gather, axis_name=AXIS)
+            g = messages.bf16_wire(gather_all, x_loc) if comm_bf16 \
+                else gather_all(x_loc)               # (n_shards, k, n, C)
             g = g.reshape((m_total,) + x_loc.shape[1:])
-        if neighbors_only:
-            g = g * shard_nbr[:, None, None].astype(dt)
-        return g
+            return g * shard_nbr[:, None, None].astype(dt)
 
     # gathered k-th iterates — one communication round per ADMM iteration.
     # Z_0 is static input: gather it exactly once per step and reuse it for
@@ -449,9 +474,19 @@ class ParallelADMMTrainer:
     def __init__(self, cfg: gcn.GCNConfig, admm: ADMMConfig, g: graph.Graph,
                  num_parts: int, mesh: Mesh | None = None, seed: int = 0,
                  use_kernel: bool = False, comm_bf16: bool = False,
-                 compressed: bool = False, part: np.ndarray | None = None):
+                 compressed: bool = False, part: np.ndarray | None = None,
+                 transport: str | None = None):
         self.cfg, self.admm, self.graph = cfg, admm, g
         self.compressed = compressed
+        if transport is None:
+            transport = "p2p" if compressed else "allgather"
+        if transport not in ("p2p", "allgather"):
+            raise ValueError(f"unknown transport {transport!r}; "
+                             f"expected 'p2p' or 'allgather'")
+        if transport == "p2p" and not compressed:
+            raise ValueError("transport='p2p' requires compressed=True — "
+                             "the dense Z-coupling reads all M payload rows")
+        self.transport = transport
         if part is None:
             part = graph.partition_graph(g.num_nodes, g.edges, num_parts,
                                          seed=seed)
@@ -479,14 +514,36 @@ class ParallelADMMTrainer:
         thetas = tuple(jnp.full((m,), admm.tau_init) for _ in zs)
         self.state = ParallelState(tuple(ws), zs, u, taus, thetas)
 
+        n_shards = mesh.shape[AXIS]
+        self._plan = None
+        ell_idx_dev = self.data.ell_indices
+        if self.transport == "p2p":
+            self._plan = messages.build_neighbor_exchange(
+                self.layout.neighbor_mask, n_shards, self.layout.n_pad)
+            if n_shards == 1:
+                # one shard hosts every community: nothing ever crosses the
+                # wire, the transports are the same program (the all-gather
+                # is a no-op collective), so keep the well-tested gather
+                # body and only the p2p byte accounting (wire_bytes == 0)
+                body_plan = None
+            else:
+                # ELL indices remapped host-side to receive-buffer slots —
+                # the body never sees an (M, ...) payload
+                body_plan = self._plan
+                csr = self.layout.compress()
+                ell_idx_dev = jnp.asarray(self._plan.localize_indices(
+                    csr.ell_indices, csr.ell_mask))
+        else:
+            body_plan = None
+
         sharded, rep = P(AXIS), P()
         n_l = cfg.num_layers
         body = partial(_iteration_body, cfg, admm, use_kernel, comm_bf16,
-                       compressed)
+                       compressed, body_plan)
         if compressed:
             # each shard carries only its lanes' ELL rows — no dense
             # (M, M, n_pad, n_pad) tensor exists on device
-            adj_data = (self.data.ell_blocks, self.data.ell_indices,
+            adj_data = (self.data.ell_blocks, ell_idx_dev,
                         self.data.ell_mask)
             adj_spec = (sharded, sharded, sharded)
         else:
@@ -525,6 +582,17 @@ class ParallelADMMTrainer:
         self.comm_stats = messages.gather_bytes(
             self.layout.neighbor_mask, self.layout.n_pad, gathered_cs,
             itemsize=2 if comm_bf16 else 4)
+        self.comm_stats["transport"] = self.transport
+        if self._plan is not None:
+            # scheduled p2p wire volume, tied to the mask-derived stats by
+            # the transport invariant: wire == true rows + round padding
+            # ≤ full, true rows ≤ needed (wire ≤ needed strictly at k=1)
+            self.comm_stats.update(messages.exchange_bytes(
+                self._plan, gathered_cs, itemsize=2 if comm_bf16 else 4))
+            messages.verify_transport_bytes(self.comm_stats)
+        else:
+            # an all-gather moves every row to every shard
+            self.comm_stats["wire_bytes"] = self.comm_stats["full_bytes"]
         # device-resident adjacency accounting for this trainer's mode
         self.comm_stats["adjacency"] = messages.adjacency_bytes(
             self.layout.neighbor_mask, self.layout.n_pad)

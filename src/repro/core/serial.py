@@ -9,11 +9,9 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import gcn, graph, subproblems
 

@@ -12,7 +12,6 @@ the standard descent-lemma test.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, NamedTuple, Sequence
 
 import jax
@@ -203,11 +202,11 @@ def admm_iteration(cfg: gcn.GCNConfig, admm: ADMMConfig, a_tilde: Array,
     for l in range(num_layers):
         z_prev = z0 if l == 0 else zs[l - 1]
         if l < num_layers - 1:
-            obj = lambda w, zp=z_prev, z=zs[l]: phi_hidden(
-                admm, f, a_tilde, w, zp, z)
+            def obj(w, zp=z_prev, z=zs[l]):
+                return phi_hidden(admm, f, a_tilde, w, zp, z)
         else:
-            obj = lambda w, zp=z_prev, z=zs[l]: phi_last(
-                admm, a_tilde, w, zp, z, u)
+            def obj(w, zp=z_prev, z=zs[l]):
+                return phi_last(admm, a_tilde, w, zp, z, u)
         w_new, tau = backtracking_step(obj, ws[l], taus[l], admm)
         new_ws.append(w_new)
         new_taus.append(tau)

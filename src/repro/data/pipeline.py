@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import collections
 import threading
-from typing import Any, Callable, Iterator, Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp

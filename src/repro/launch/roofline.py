@@ -262,6 +262,19 @@ def hlo_census(text: str) -> Census:
             base_op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
             if base_op in COLLECTIVE_OPS:
                 nbytes = sum(bytes_of.get(o, 0) for o in ins.operands)
+                if base_op == "all-gather":
+                    # per-device wire volume: the (n_shards-1)/n_shards of
+                    # the gathered result received from peers.  The operand
+                    # alone (this shard's contribution) understates a ring
+                    # all-gather by n_shards×, which would make it look
+                    # cheaper than a neighbour-only permute schedule that
+                    # moves strictly fewer rows.  An async all-gather-start
+                    # carries its input buffer inside the result tuple —
+                    # drop it before subtracting the own contribution.
+                    total = ins.result_bytes
+                    if not total and ins.tuple_bytes:
+                        total = ins.tuple_bytes - nbytes
+                    nbytes = max(total - nbytes, nbytes)
                 c.collective_bytes += nbytes
                 c.collectives[base_op]["count"] += 1
                 c.collectives[base_op]["bytes"] += nbytes

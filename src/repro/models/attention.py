@@ -16,7 +16,7 @@ Caches:
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -208,7 +208,6 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int,
 def gqa_decode_step(cfg: ModelConfig, p: Params, cache: Params,
                     x_t: Array, rolling: bool = False) -> tuple[Array, Params]:
     """One token: x_t (B, 1, D) against the cache."""
-    hd = cfg.resolved_head_dim
     b = x_t.shape[0]
     pos = cache["pos"]
     q, k, v = _project_qkv(cfg, p, x_t)

@@ -14,15 +14,14 @@ shapes); ``rolling=True`` selects the sliding-window rolling cache used by
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import InputShape
-from repro.models import attention, layers, transformer
+from repro.models import layers, transformer
 from repro.models.layers import Params
 from repro.optim import optimizers
 

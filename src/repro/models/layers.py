@@ -148,7 +148,6 @@ def apply_conv(p: Params, x: Array) -> Array:
 
 def apply_conv_step(p: Params, state: Array, x_t: Array):
     """One decode step. state: (B, k-1, W) past inputs; x_t: (B, W)."""
-    k = p["w"].shape[0]
     window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, k, W)
     out = jnp.einsum("bkw,kw->bw", window, p["w"]) + p["b"]
     return out, window[:, 1:, :]

@@ -12,7 +12,6 @@ structure: fine-grained experts + shared experts + aux load-balance loss.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ Block layout (simplified Mamba-2):
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

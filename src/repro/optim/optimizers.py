@@ -6,7 +6,6 @@ plus momentum/AdamW used by the transformer substrate. ``update`` returns the
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -48,7 +47,8 @@ def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
     """Adam with f32 moments (params may be bf16 — deltas cast back)."""
 
     def init(params):
-        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def f32(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"m": jax.tree.map(f32, params),
                 "v": jax.tree.map(f32, params),
                 "t": jnp.zeros((), jnp.int32)}

@@ -21,11 +21,44 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 
 FSDP_THRESHOLD = 8e9    # params; above this, shard input dims over 'data'
+
+
+def ring_round_coloring(pairs, n_shards: int) -> dict[int, list]:
+    """Colour directed shard-to-shard messages into ``ppermute`` rounds.
+
+    ``pairs``: iterable of (src, dst) shard edges (src != dst).  Two
+    messages can share a ``lax.ppermute`` round only if the round's pairs
+    form a partial permutation (each shard sends to at most one destination
+    and receives from at most one source).  Colouring by the ring offset
+    ``(dst - src) mod n_shards`` satisfies this by construction — for a
+    fixed offset every source and every destination is distinct — and is
+    static, so the schedule compiles to a fixed unrolled sequence of
+    collective-permutes.  Returns {offset: sorted [(src, dst), ...]} for
+    the offsets that carry at least one message; inactive offsets (no shard
+    pair needs them) are simply absent — the rounds an all-gather-equivalent
+    ring would have wasted.
+    """
+    rounds: dict[int, list] = {}
+    for src, dst in pairs:
+        src, dst = int(src), int(dst)
+        if not (0 <= src < n_shards and 0 <= dst < n_shards):
+            raise ValueError(f"shard pair {(src, dst)} out of range "
+                             f"for n_shards={n_shards}")
+        if src == dst:
+            raise ValueError(f"self-edge {(src, dst)} needs no wire")
+        rounds.setdefault((dst - src) % n_shards, []).append((src, dst))
+    for offset, members in rounds.items():
+        members.sort()
+        if len(set(s for s, _ in members)) != len(members) or \
+                len(set(d for _, d in members)) != len(members):
+            raise ValueError(f"round {offset} is not a partial permutation: "
+                             f"{members}")
+    return dict(sorted(rounds.items()))
 
 
 def _axis_size(mesh: Mesh, name: str) -> int:
@@ -147,7 +180,6 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shapes: Any) -> Any:
     total_dp = int(np.prod([_axis_size(mesh, a) for a in dp]))
 
     def rule(path, leaf):
-        name = _path_str(path)
         shape = leaf.shape
         nd = len(shape)
         if nd <= 1:

@@ -9,6 +9,9 @@ import sys
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)   # benchmarks/ namespace package
+
+from benchmarks import check_bench  # noqa: E402
 
 
 def _run_bench(script: str, out_path: str) -> dict:
@@ -28,6 +31,8 @@ def test_block_sparsity_quick_json(tmp_path):
                          str(tmp_path / "BENCH_block_sparsity.json"))
     assert payload["quick"] is True
     assert payload["agg_sweep"] and payload["trainer_sweep"]
+    # check_bench enforces the wire ≤ needed ≤ full chain per row
+    check_bench.check_block_sparsity(payload)
     modes = {r["mode"] for r in payload["trainer_sweep"]}
     assert modes == {"dense", "compressed"}
     for r in payload["trainer_sweep"]:
@@ -49,8 +54,11 @@ def test_block_sparsity_quick_json(tmp_path):
 def test_speedup_quick_json(tmp_path):
     payload = _run_bench("speedup.py", str(tmp_path / "BENCH_speedup.json"))
     assert payload["quick"] is True
+    check_bench.check_speedup(payload)
     modes = {r["mode"] for r in payload["rows"]}
-    assert modes == {"parallel", "compressed"}
+    assert modes == {"parallel", "compressed", "p2p"}
+    # the p2p transport's wire-byte win at M=32 (acceptance criterion)
+    assert payload["m32_wire"]["wire_bytes"] < payload["m32_wire"]["full_bytes"]
     for r in payload["rows"]:
         assert {"mode", "dataset", "adjacency_bytes",
                 "parallel_per_epoch_s", "serial_per_epoch_s"} <= set(r)

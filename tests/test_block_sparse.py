@@ -6,7 +6,6 @@ These run without hypothesis; test_property.py has generative versions.
 """
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

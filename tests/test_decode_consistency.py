@@ -85,7 +85,6 @@ def test_encdec_decode_runs_against_memory():
 
     caches = model.init_cache(b, 8)
     # fill the cross-attention k/v from the encoder memory
-    import jax.tree_util as jtu
     hd = cfg.resolved_head_dim
     dec_p = params["stack"]["dec"]
 

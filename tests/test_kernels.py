@@ -1,6 +1,5 @@
 """Per-kernel validation: Pallas (interpret=True — executes the kernel body
 on CPU) vs the pure-jnp oracle in ref.py, swept over shapes and dtypes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,277 @@
+"""Neighbour-only ppermute transport: round-schedule correctness, wire-byte
+invariants, and p2p vs allgather trainer parity on a real 2-shard mesh.
+
+The schedule is host-side static (messages.NeighborExchange); the parity
+test runs in a subprocess so XLA can be launched with 2 host devices, and
+additionally proves from the compiled HLO that the p2p step contains no
+all-gather op (no (M, n_pad, C) payload is ever materialised) while moving
+fewer collective bytes than the allgather oracle.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import graph, messages
+from repro.sharding.partition import ring_round_coloring
+
+
+@pytest.fixture(scope="module", params=[2, 4])
+def plan_case(request):
+    n_shards = request.param
+    g, part = graph.synthetic_powerlaw_communities(
+        num_parts=8, nodes_per_part=12, attach=2, seed=4, feat_dim=8)
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True)
+    plan = messages.build_neighbor_exchange(layout.neighbor_mask, n_shards,
+                                            layout.n_pad)
+    return layout, plan, n_shards
+
+
+def _deliveries(plan):
+    """(dst_shard, global_id) pairs the schedule actually transmits."""
+    k = plan.lanes_per_shard
+    out = []
+    for rnd in plan.rounds:
+        for src, dst in rnd.pairs:
+            for t in range(rnd.rows_pad):
+                slot = int(rnd.recv_slot[dst, t])
+                if slot < plan.r_pad:      # real row, not round padding
+                    gid = src * k + int(rnd.send_idx[src, t])
+                    out.append((dst, gid, slot))
+    return out
+
+
+def test_schedule_covers_every_ell_edge_exactly_once(plan_case):
+    """Every cross-shard ELL neighbour edge is delivered exactly once, to
+    the slot the localized indices read; same-shard edges never hit the
+    wire."""
+    layout, plan, n_shards = plan_case
+    csr = layout.compress()
+    k = plan.lanes_per_shard
+    deliveries = _deliveries(plan)
+    seen = {}
+    for dst, gid, slot in deliveries:
+        assert (dst, gid) not in seen, f"duplicate delivery {(dst, gid)}"
+        seen[(dst, gid)] = slot
+        assert gid // k != dst, "own-shard rows must not be wired"
+        # delivered to the slot the receive buffer maps this id to
+        assert plan.slot_of(dst)[gid] == slot
+
+    # required = every masked ELL edge, lifted to (shard, source community)
+    required = set()
+    for m in range(layout.num_parts):
+        for d in np.flatnonzero(np.asarray(csr.ell_mask[m]) > 0):
+            r = int(csr.ell_indices[m, d])
+            if r // k != m // k:
+                required.add((m // k, r))
+            else:
+                # resident rows are served locally from own_slots
+                assert r in plan.needed_ids[m // k]
+    assert set(seen) == required
+
+    # localized indices stay inside the receive buffer and invert correctly
+    local = plan.localize_indices(csr.ell_indices, csr.ell_mask)
+    assert local.max() < plan.r_pad
+    for m in range(layout.num_parts):
+        ids = plan.needed_ids[m // k]
+        for d in np.flatnonzero(np.asarray(csr.ell_mask[m]) > 0):
+            assert ids[local[m, d]] == int(csr.ell_indices[m, d])
+
+
+def test_rounds_are_partial_permutations(plan_case):
+    _, plan, n_shards = plan_case
+    for rnd in plan.rounds:
+        srcs = [s for s, _ in rnd.pairs]
+        dsts = [d for _, d in rnd.pairs]
+        assert len(set(srcs)) == len(srcs)
+        assert len(set(dsts)) == len(dsts)
+        for src, dst in rnd.pairs:
+            assert (dst - src) % n_shards == rnd.offset
+
+
+def test_ring_round_coloring_rejects_bad_input():
+    with pytest.raises(ValueError):
+        ring_round_coloring([(0, 0)], 2)
+    with pytest.raises(ValueError):
+        ring_round_coloring([(0, 3)], 2)
+    rounds = ring_round_coloring([(0, 1), (1, 0), (0, 2)], 4)
+    assert set(rounds) == {1, 2, 3}
+
+
+def test_wire_byte_invariant(plan_case):
+    """p2p wire_bytes ≤ full_bytes, == true rows + round padding, and the
+    scheduled true rows never exceed the mask-derived needed volume."""
+    layout, plan, n_shards = plan_case
+    dims = [16, 8]
+    stats = messages.gather_bytes(layout.neighbor_mask, layout.n_pad, dims)
+    stats.update(messages.exchange_bytes(plan, dims))
+    messages.verify_transport_bytes(stats)      # must not raise
+    assert stats["wire_bytes"] <= stats["full_bytes"]
+    assert stats["wire_bytes"] == (stats["p2p_needed_bytes"]
+                                   + stats["padding_bytes"])
+    # padding included, the schedule stays within the mask-derived need
+    assert stats["wire_bytes"] <= stats["needed_bytes"]
+    assert stats["wire_bytes"] > 0              # cross-shard edges exist
+    # the whole point: the schedule moves less than the all-gather
+    assert stats["wire_bytes"] < stats["full_bytes"]
+
+    bad = dict(stats)
+    bad["padding_bytes"] += 1
+    with pytest.raises(ValueError):
+        messages.verify_transport_bytes(bad)
+    bad = dict(stats)
+    bad["wire_bytes"] = bad["full_bytes"] + 1
+    with pytest.raises(ValueError):
+        messages.verify_transport_bytes(bad)
+
+
+def test_verify_transport_multi_lane_padding_is_soft():
+    """On multi-lane shards round padding may exceed the mask slack on
+    skewed topologies — that must be recorded (wire_within_needed=False),
+    not raised, or legitimate compressed trainers become unconstructible.
+    At k=1 padding is impossible by construction, so there it raises."""
+    base = {"full_bytes": 1000, "needed_bytes": 500,
+            "p2p_needed_bytes": 400, "padding_bytes": 200,
+            "wire_bytes": 600, "lanes_per_shard": 2}
+    out = messages.verify_transport_bytes(dict(base))
+    assert out["wire_within_needed"] is False
+    with pytest.raises(ValueError):
+        messages.verify_transport_bytes(dict(base, lanes_per_shard=1))
+    ok = messages.verify_transport_bytes(
+        dict(base, padding_bytes=0, wire_bytes=400, lanes_per_shard=1))
+    assert ok["wire_within_needed"] is True
+
+
+def test_trainer_records_and_verifies_p2p_stats():
+    from repro.core import gcn
+    from repro.core.parallel import ParallelADMMTrainer
+    from repro.core.subproblems import ADMMConfig
+
+    g, part = graph.synthetic_powerlaw_communities(
+        num_parts=4, nodes_per_part=16, attach=1, seed=2, feat_dim=8)
+    cfg = gcn.GCNConfig(layer_dims=(8, 8, g.num_classes))
+    admm = ADMMConfig(nu=1e-3, rho=1e-3)
+    tr = ParallelADMMTrainer(cfg, admm, g, num_parts=4, seed=0, part=part,
+                             compressed=True)
+    assert tr.transport == "p2p"
+    assert tr.comm_stats["transport"] == "p2p"
+    assert tr.comm_stats["wire_bytes"] <= tr.comm_stats["needed_bytes"]
+    ag = ParallelADMMTrainer(cfg, admm, g, num_parts=4, seed=0, part=part,
+                             compressed=True, transport="allgather")
+    assert ag.comm_stats["wire_bytes"] == ag.comm_stats["full_bytes"]
+    with pytest.raises(ValueError):
+        ParallelADMMTrainer(cfg, admm, g, num_parts=4, seed=0, part=part,
+                            transport="p2p")            # dense + p2p
+    with pytest.raises(ValueError):
+        ParallelADMMTrainer(cfg, admm, g, num_parts=4, seed=0, part=part,
+                            compressed=True, transport="carrier-pigeon")
+
+
+_P2P_WORKER = r"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.core import gcn, graph, messages
+from repro.core.parallel import AXIS, ParallelADMMTrainer
+from repro.core.subproblems import ADMMConfig
+from repro.launch import roofline
+from repro.util import shard_map
+from repro.util.compat import make_mesh
+from jax.sharding import PartitionSpec as P
+
+N_SHARDS = 4
+assert len(jax.devices()) >= N_SHARDS, jax.devices()
+g, part = graph.synthetic_powerlaw_communities(
+    num_parts=12, nodes_per_part=12, attach=1, seed=0, feat_dim=8)
+cfg = gcn.GCNConfig(layer_dims=(8, 8, g.num_classes))
+admm = ADMMConfig(nu=1e-3, rho=1e-3)
+mesh2 = make_mesh((N_SHARDS,), (AXIS,), devices=jax.devices()[:N_SHARDS])
+
+# --- raw exchange == the needed rows of an all-gather, on real devices ---
+layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                      compressed=True)
+plan = messages.build_neighbor_exchange(layout.neighbor_mask, N_SHARDS,
+                                        layout.n_pad)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(12, layout.n_pad, 8)).astype(np.float32))
+ex = shard_map(lambda v: messages.exchange_neighbors(plan, v, AXIS),
+               mesh=mesh2, in_specs=(P(AXIS),), out_specs=P(AXIS),
+               check_rep=False)
+bufs = np.asarray(jax.jit(ex)(x)).reshape(N_SHARDS, plan.r_pad,
+                                          layout.n_pad, 8)
+for s in range(N_SHARDS):
+    ids = plan.needed_ids[s]
+    for slot, gid in enumerate(ids):
+        np.testing.assert_allclose(bufs[s, slot], np.asarray(x[gid]),
+                                   rtol=0, atol=0)
+    # slots past the shard's needed set stay zero
+    for slot in range(len(ids), plan.r_pad):
+        assert np.abs(bufs[s, slot]).max() == 0.0
+print("EXCHANGE_OK")
+
+# --- trainer parity: p2p vs allgather, 3 iterations, W/Z/U + Lagrangian ---
+p2p = ParallelADMMTrainer(cfg, admm, g, num_parts=12, seed=0, part=part,
+                          mesh=mesh2, compressed=True, transport="p2p")
+ag = ParallelADMMTrainer(cfg, admm, g, num_parts=12, seed=0, part=part,
+                         mesh=mesh2, compressed=True, transport="allgather")
+assert p2p.transport == "p2p" and ag.transport == "allgather"
+for _ in range(3):
+    p2p.step(); ag.step()
+for za, zp in zip(ag.state.zs, p2p.state.zs):
+    np.testing.assert_allclose(np.asarray(za), np.asarray(zp),
+                               rtol=2e-4, atol=2e-5)
+for wa, wp in zip(ag.state.weights, p2p.state.weights):
+    np.testing.assert_allclose(np.asarray(wa), np.asarray(wp),
+                               rtol=2e-4, atol=2e-5)
+np.testing.assert_allclose(np.asarray(ag.state.u), np.asarray(p2p.state.u),
+                           rtol=2e-4, atol=2e-5)
+lag_p, lag_a = float(p2p._lagrangian(p2p.state)), float(ag._lagrangian(ag.state))
+assert abs(lag_p - lag_a) <= 1e-4 * max(1.0, abs(lag_a)), (lag_p, lag_a)
+print("PARITY_OK")
+
+# --- HLO proof: the p2p step materialises no gathered payload ---
+hlo_p2p = p2p._step.lower(p2p.state).compile().as_text()
+hlo_ag = ag._step.lower(ag.state).compile().as_text()
+assert "all-gather" not in hlo_p2p, "p2p step still all-gathers"
+assert "collective-permute" in hlo_p2p
+assert "all-gather" in hlo_ag
+c_p2p = roofline.hlo_census(hlo_p2p).collective_bytes
+c_ag = roofline.hlo_census(hlo_ag).collective_bytes
+assert 0 < c_p2p < c_ag, (c_p2p, c_ag)
+print(f"WIRE_OK p2p={c_p2p} allgather={c_ag}")
+
+# --- bf16 wire path stays close ---
+b16 = ParallelADMMTrainer(cfg, admm, g, num_parts=12, seed=0, part=part,
+                          mesh=mesh2, compressed=True, transport="p2p",
+                          comm_bf16=True)
+for _ in range(2):
+    b16.step()
+ref = ParallelADMMTrainer(cfg, admm, g, num_parts=12, seed=0, part=part,
+                          mesh=mesh2, compressed=True, transport="p2p")
+for _ in range(2):
+    ref.step()
+for zb, zr in zip(b16.state.zs, ref.state.zs):
+    np.testing.assert_allclose(np.asarray(zb), np.asarray(zr),
+                               rtol=0.05, atol=0.05)
+print("BF16_OK")
+"""
+
+
+def test_p2p_parity_on_multi_shard_mesh():
+    """p2p vs allgather on a real 4-shard host mesh (subprocess: XLA locks
+    the device count at first init): identical W/Z/U and Lagrangian after 3
+    iterations, raw exchange delivers exactly the needed rows, and the
+    compiled p2p HLO contains collective-permutes but no all-gather while
+    moving fewer collective bytes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _P2P_WORKER],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    for tag in ("EXCHANGE_OK", "PARITY_OK", "WIRE_OK", "BF16_OK"):
+        assert tag in out.stdout, out.stdout

@@ -9,7 +9,7 @@ pytest.importorskip(
     reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import gcn, graph, messages
+from repro.core import graph, messages
 from repro.core.subproblems import ADMMConfig, backtracking_step
 
 SETTINGS = dict(max_examples=25, deadline=None)

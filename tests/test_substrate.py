@@ -1,6 +1,5 @@
 """Substrate unit tests: optimizers, checkpointing, data pipeline, sharding
 rules, HLO census."""
-import json
 
 import jax
 import jax.numpy as jnp
