@@ -9,7 +9,11 @@ calls this) so every push proves:
     M may pay the tiny ELL index/mask overhead; the largest swept M must be
     strictly smaller);
   * the p2p transport's scheduled wire bytes stay below the all-gather
-    volume — the wire-byte win the neighbour-only exchange exists for.
+    volume — the wire-byte win the neighbour-only exchange exists for;
+  * the multilevel partitioner strictly beats the BFS+KL stand-in on edge
+    cut at M=32 (no worse max_deg / wire bytes, strict balance) and never
+    cuts more than it on the trainer datasets — partition quality is the
+    lever behind every wire-byte number.
 
 Standalone: ``PYTHONPATH=src python benchmarks/check_bench.py [--root DIR]``
 Exit code 0 = all checks pass; failures raise CheckError with the path of
@@ -81,10 +85,12 @@ def check_block_sparsity(payload: dict) -> None:
 
 def check_speedup(payload: dict) -> None:
     where = "BENCH_speedup"
-    _fields(payload, {"quick": bool, "rows": list, "m32_wire": dict}, where)
+    _fields(payload, {"quick": bool, "rows": list, "m32_wire": dict,
+                      "m32_partition": dict}, where)
     modes = {r["mode"] for r in payload["rows"]}
-    _require(modes == {"parallel", "compressed", "p2p"}, where,
-             f"rows must cover parallel/compressed/p2p, got {sorted(modes)}")
+    _require(modes == {"parallel", "compressed", "p2p", "p2p_ml"}, where,
+             f"rows must cover parallel/compressed/p2p/p2p_ml, "
+             f"got {sorted(modes)}")
     for i, r in enumerate(payload["rows"]):
         w = f"{where}.rows[{i}]"
         _fields(r, {"mode": str, "dataset": str,
@@ -108,6 +114,18 @@ def check_speedup(payload: dict) -> None:
         _require(d["p2p"]["scheduled_wire_bytes"]
                  <= d["p2p"]["comm_full_bytes"], w,
                  "scheduled wire bytes above the all-gather volume")
+        # the multilevel partitioner may never cut more edges than the
+        # BFS+KL stand-in it supersedes (p2p_ml row == p2p row but
+        # partitioned by sharding.multilevel)
+        _require(d["p2p_ml"]["partitioner"] == "multilevel"
+                 and d["p2p"]["partitioner"] == "bfs_kl", w,
+                 "p2p/p2p_ml rows carry the wrong partitioner tag")
+        _require(d["p2p_ml"]["edge_cut"] <= d["p2p"]["edge_cut"], w,
+                 f"multilevel cut {d['p2p_ml']['edge_cut']} above bfs_kl "
+                 f"{d['p2p']['edge_cut']}")
+        for mode in ("p2p", "p2p_ml"):
+            _require(d[mode]["part_balance"] <= 1.0 + 1e-9, w,
+                     f"{mode} partition exceeds the strict balance cap")
 
     m32 = payload["m32_wire"]
     w = f"{where}.m32_wire"
@@ -119,6 +137,33 @@ def check_speedup(payload: dict) -> None:
              "p2p wire bytes not reduced vs allgather at M=32")
     _require(m32["wire_bytes"] <= m32["needed_bytes"], w,
              "p2p wire bytes above the mask-derived needed volume")
+
+    # partitioner head-to-head at M=32 on the power-law benchmark graph:
+    # the multilevel pass must strictly beat the BFS+KL stand-in on cut
+    # (the acceptance criterion — cut IS the p2p wire volume) with no
+    # worse ELL fan-in and no more scheduled wire bytes.
+    mp = payload["m32_partition"]
+    w = f"{where}.m32_partition"
+    _fields(mp, {"M": int, "methods": dict}, w)
+    _require(set(mp["methods"]) == {"bfs_kl", "multilevel"}, w,
+             f"methods must cover bfs_kl/multilevel, "
+             f"got {sorted(mp['methods'])}")
+    for method, q in mp["methods"].items():
+        _fields(q, {"edge_cut": int, "balance": numbers.Real,
+                    "max_deg": int, "wire_bytes": int,
+                    "p2p_rounds": int}, f"{w}.{method}")
+        _require(q["balance"] <= 1.0 + 1e-9, f"{w}.{method}",
+                 "partition exceeds the strict balance cap")
+    kl, ml = mp["methods"]["bfs_kl"], mp["methods"]["multilevel"]
+    _require(ml["edge_cut"] < kl["edge_cut"], w,
+             f"multilevel cut {ml['edge_cut']} not strictly below bfs_kl "
+             f"{kl['edge_cut']} at M=32")
+    _require(ml["max_deg"] <= kl["max_deg"], w,
+             f"multilevel max_deg {ml['max_deg']} worse than bfs_kl "
+             f"{kl['max_deg']}")
+    _require(ml["wire_bytes"] <= kl["wire_bytes"], w,
+             f"multilevel wire {ml['wire_bytes']} above bfs_kl "
+             f"{kl['wire_bytes']}")
 
 
 CHECKS = {

@@ -3,7 +3,10 @@
 Serial = one community, one device.  Parallel = M=3 communities on 3 host
 devices (the paper used 3 agents on one Xeon; host CPU devices are real
 threads, so the speedup mechanism matches), in both the dense-replicated
-and the block-compressed (sharded ELL) adjacency representations.  Each
+and the block-compressed (sharded ELL) adjacency representations; the
+``p2p``/``p2p_ml`` modes run the compressed trainer under the neighbour
+p2p transport with the bfs_kl vs multilevel partitioner respectively
+(rows carry each partition's edge_cut / balance / max_deg).  Each
 configuration runs in a subprocess so the device count can differ (XLA
 locks it at first init).
 
@@ -46,10 +49,12 @@ WORKER = textwrap.dedent("""
         adjacency_bytes = int(tr.a_tilde.nbytes)
     else:
         from repro.core.parallel import ParallelADMMTrainer
-        transport = "p2p" if mode == "p2p" else "allgather"
-        tr = ParallelADMMTrainer(cfg, admm, g, num_parts=3, seed=0,
-                                 compressed=(mode in ("compressed", "p2p")),
-                                 transport=transport)
+        transport = "p2p" if mode in ("p2p", "p2p_ml") else "allgather"
+        partitioner = "multilevel" if mode == "p2p_ml" else "bfs_kl"
+        tr = ParallelADMMTrainer(
+            cfg, admm, g, num_parts=3, seed=0,
+            compressed=(mode in ("compressed", "p2p", "p2p_ml")),
+            transport=transport, partitioner=partitioner)
         step = tr.step
         adjacency_bytes = int(tr.data.adjacency_nbytes)
     step(); jax.block_until_ready(tr.state.zs[-1])   # compile
@@ -68,9 +73,14 @@ WORKER = textwrap.dedent("""
     acc = tr._metrics(tr.state)
     comm = {}
     if mode != "serial":
+        part_q = tr.partition_stats
         comm = {"scheduled_wire_bytes": int(tr.comm_stats["wire_bytes"]),
                 "needed_bytes": int(tr.comm_stats["needed_bytes"]),
-                "full_bytes": int(tr.comm_stats["full_bytes"])}
+                "full_bytes": int(tr.comm_stats["full_bytes"]),
+                "partitioner": tr.partitioner,
+                "edge_cut": int(part_q["edge_cut"]),
+                "part_balance": float(part_q["balance"]),
+                "part_max_deg": int(part_q["max_deg"])}
     print(json.dumps({"mode": mode, "total_s": total,
                       "per_epoch_s": total / epochs,
                       "per_device_flops": float(census.flops),
@@ -97,7 +107,7 @@ def run(epochs: int = 20, hidden: int = 256,
     rows = []
     for ds in datasets:
         serial = _run("serial", ds, epochs, hidden)
-        for mode in ("parallel", "compressed", "p2p"):
+        for mode in ("parallel", "compressed", "p2p", "p2p_ml"):
             parallel = _run(mode, ds, epochs, hidden)
             speedup = serial["total_s"] / parallel["total_s"]
             # analytic speedup: per-agent compute ratio from the HLO census —
@@ -118,6 +128,10 @@ def run(epochs: int = 20, hidden: int = 256,
                 "parallel_collective_bytes": parallel["collective_bytes"],
                 "scheduled_wire_bytes": parallel.get("scheduled_wire_bytes"),
                 "comm_full_bytes": parallel.get("full_bytes"),
+                "partitioner": parallel.get("partitioner"),
+                "edge_cut": parallel.get("edge_cut"),
+                "part_balance": parallel.get("part_balance"),
+                "part_max_deg": parallel.get("part_max_deg"),
                 "adjacency_bytes": parallel["adjacency_bytes"],
                 "serial_adjacency_bytes": serial["adjacency_bytes"],
                 "serial_test_acc": round(serial["test_acc"], 3),
@@ -163,12 +177,54 @@ def wire_comparison(m: int = 32, hidden: int = 64) -> dict:
     return out
 
 
+def partition_comparison(m: int = 32, hidden: int = 64) -> dict:
+    """Partitioner quality head-to-head on the M=32 power-law benchmark
+    graph: bfs_kl (the original stand-in) vs the multilevel
+    coarsen→partition→uncoarsen pass (sharding.multilevel).  Per method:
+    edge cut (== the cross-community block volume the p2p transport wires),
+    balance vs the strict cap, block max_deg (the ELL fan-in every shard
+    pays), and the scheduled NeighborExchange wire bytes the partition
+    induces at one agent per community.
+    """
+    from repro.core import graph, messages
+    g, _ = graph.synthetic_powerlaw_communities(
+        m, nodes_per_part=32, attach=2, seed=0, feat_dim=hidden)
+    out = {"M": m, "num_edges": int(g.num_edges), "methods": {}}
+    for method in ("bfs_kl", "multilevel"):
+        part = graph.partition_graph(g.num_nodes, g.edges, m, seed=0,
+                                     method=method)
+        q = graph.partition_quality(g.num_nodes, g.edges, part, m)
+        layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                              compressed=True)
+        plan = messages.build_neighbor_exchange(layout.neighbor_mask, m,
+                                                layout.n_pad)
+        wire = messages.exchange_bytes(plan, [hidden])
+        out["methods"][method] = {
+            "edge_cut": q["edge_cut"],
+            "cut_frac": round(q["cut_frac"], 4),
+            "balance": round(q["balance"], 4),
+            "max_deg": q["max_deg"],
+            "nnz_blocks": q["nnz_blocks"],
+            "n_pad": layout.n_pad,
+            "wire_bytes": wire["wire_bytes"],
+            "p2p_rounds": wire["num_rounds"],
+        }
+    kl, ml = out["methods"]["bfs_kl"], out["methods"]["multilevel"]
+    print(f"[speedup] M={m} partitioner: bfs_kl cut {kl['edge_cut']} "
+          f"(max_deg {kl['max_deg']}, wire {kl['wire_bytes']/1e3:.0f}kB) -> "
+          f"multilevel cut {ml['edge_cut']} (max_deg {ml['max_deg']}, wire "
+          f"{ml['wire_bytes']/1e3:.0f}kB, "
+          f"{1 - ml['edge_cut']/kl['edge_cut']:.0%} fewer cut edges)")
+    return out
+
+
 def main(quick: bool = False, out: "str | None" = None):
     if quick:
         rows = run(epochs=2, hidden=32, datasets=("amazon_photo_mini",))
     else:
         rows = run()
-    payload = {"quick": quick, "rows": rows, "m32_wire": wire_comparison()}
+    payload = {"quick": quick, "rows": rows, "m32_wire": wire_comparison(),
+               "m32_partition": partition_comparison()}
     out_path = pathlib.Path(out) if out else \
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_speedup.json"
     out_path.write_text(json.dumps(payload, indent=2))

@@ -38,6 +38,12 @@ def main():
                     help="Z/U/q exchange: neighbour-only ppermute rounds "
                          "(p2p, default with --compressed) or the masked "
                          "all-gather oracle (default otherwise)")
+    ap.add_argument("--partitioner", default="multilevel",
+                    choices=["bfs_kl", "multilevel"],
+                    help="community detection: multilevel coarsen→partition"
+                         "→uncoarsen (METIS scheme, sharding.multilevel — "
+                         "lower edge cut, hence less p2p wire) or the "
+                         "BFS-grow + Kernighan-Lin stand-in (bfs_kl)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -47,17 +53,20 @@ def main():
                                     g.num_classes))
     admm = ADMMConfig(nu=hyper, rho=hyper)
 
-    part = graph.partition_graph(g.num_nodes, g.edges, args.parts, seed=0)
-    cut = graph.edge_cut(g.edges, part)
-    print(f"partition: {args.parts} communities, sizes "
-          f"{np.bincount(part).tolist()}, edge cut {cut}/{g.num_edges} "
-          f"({100 * cut / g.num_edges:.1f}%)")
+    part = graph.partition_graph(g.num_nodes, g.edges, args.parts, seed=0,
+                                 method=args.partitioner)
+    q = graph.partition_quality(g.num_nodes, g.edges, part, args.parts)
+    print(f"partition [{args.partitioner}]: {args.parts} communities, sizes "
+          f"{np.bincount(part).tolist()}, edge cut "
+          f"{q['edge_cut']}/{g.num_edges} ({100 * q['cut_frac']:.1f}%), "
+          f"balance {q['balance']:.3f}, block max_deg {q['max_deg']}")
 
     trainer = ParallelADMMTrainer(cfg, admm, g, num_parts=args.parts,
                                   seed=0, comm_bf16=args.comm_bf16,
                                   compressed=args.compressed,
                                   use_kernel=args.use_kernel,
-                                  transport=args.transport)
+                                  transport=args.transport,
+                                  part=part, partitioner=args.partitioner)
     print(f"mesh: {dict(trainer.mesh.shape)}; neighbour topology:\n"
           f"{np.asarray(trainer.data.neighbor_mask).astype(int)}")
     cs = trainer.comm_stats

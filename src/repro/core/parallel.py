@@ -475,7 +475,8 @@ class ParallelADMMTrainer:
                  num_parts: int, mesh: Mesh | None = None, seed: int = 0,
                  use_kernel: bool = False, comm_bf16: bool = False,
                  compressed: bool = False, part: np.ndarray | None = None,
-                 transport: str | None = None):
+                 transport: str | None = None,
+                 partitioner: str | None = None):
         self.cfg, self.admm, self.graph = cfg, admm, g
         self.compressed = compressed
         if transport is None:
@@ -488,8 +489,17 @@ class ParallelADMMTrainer:
                              "the dense Z-coupling reads all M payload rows")
         self.transport = transport
         if part is None:
+            partitioner = partitioner or "bfs_kl"
             part = graph.partition_graph(g.num_nodes, g.edges, num_parts,
-                                         seed=seed)
+                                         seed=seed, method=partitioner)
+        else:
+            # caller-supplied partition; a caller that computed it with
+            # partition_graph may pass ``partitioner`` so the stats stay
+            # honestly labelled (no re-partition just for the tag)
+            partitioner = partitioner or "precomputed"
+        self.partitioner = partitioner
+        self.partition_stats = graph.partition_quality(
+            g.num_nodes, g.edges, part, num_parts)
         self.layout = graph.build_community_layout(g.num_nodes, g.edges, part,
                                                    compressed=compressed)
         self.data = community_data(g, self.layout, compressed=compressed)
@@ -583,6 +593,10 @@ class ParallelADMMTrainer:
             self.layout.neighbor_mask, self.layout.n_pad, gathered_cs,
             itemsize=2 if comm_bf16 else 4)
         self.comm_stats["transport"] = self.transport
+        # the partition sets the communication: its edge cut is the p2p
+        # wire volume's block count, its max_deg the ELL fan-in
+        self.comm_stats["partitioner"] = self.partitioner
+        self.comm_stats["partition"] = dict(self.partition_stats)
         if self._plan is not None:
             # scheduled p2p wire volume, tied to the mask-derived stats by
             # the transport invariant: wire == true rows + round padding

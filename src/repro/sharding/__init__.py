@@ -1,2 +1,3 @@
+from repro.sharding.multilevel import multilevel_partition  # noqa: F401
 from repro.sharding.partition import (  # noqa: F401
     batch_specs, cache_specs, param_specs)

@@ -56,9 +56,15 @@ def test_speedup_quick_json(tmp_path):
     assert payload["quick"] is True
     check_bench.check_speedup(payload)
     modes = {r["mode"] for r in payload["rows"]}
-    assert modes == {"parallel", "compressed", "p2p"}
+    assert modes == {"parallel", "compressed", "p2p", "p2p_ml"}
     # the p2p transport's wire-byte win at M=32 (acceptance criterion)
     assert payload["m32_wire"]["wire_bytes"] < payload["m32_wire"]["full_bytes"]
+    # the multilevel partitioner's cut win at M=32 (acceptance criterion):
+    # strictly fewer cut edges, no worse ELL fan-in, no more wire
+    mp = payload["m32_partition"]["methods"]
+    assert mp["multilevel"]["edge_cut"] < mp["bfs_kl"]["edge_cut"]
+    assert mp["multilevel"]["max_deg"] <= mp["bfs_kl"]["max_deg"]
+    assert mp["multilevel"]["wire_bytes"] <= mp["bfs_kl"]["wire_bytes"]
     for r in payload["rows"]:
         assert {"mode", "dataset", "adjacency_bytes",
                 "parallel_per_epoch_s", "serial_per_epoch_s"} <= set(r)

@@ -115,6 +115,70 @@ def test_blockcsr_shard_slice_covers_all_rows():
         csr.shard_slice(0, 4)       # 6 rows don't split into 4 shards
 
 
+GOLDEN_QUALITY = {
+    # (graph, M): {method: (edge_cut, max_deg)} — exact values; a changed
+    # cut means the partitioner changed behaviour, which must be a
+    # deliberate decision (re-record the goldens), never silent drift.
+    ("powerlaw32", 32): {"bfs_kl": (1224, 24), "multilevel": (591, 15)},
+    ("powerlaw8", 8): {"bfs_kl": (179, 6), "multilevel": (116, 6)},
+    ("sbm_photo_mini", 3): {"bfs_kl": (6968, 3), "multilevel": (4149, 3)},
+    ("sbm_photo_mini", 4): {"bfs_kl": (6035, 4), "multilevel": (4085, 4)},
+}
+
+
+def _quality_graph(name: str):
+    if name == "powerlaw32":
+        return graph.synthetic_powerlaw_communities(
+            32, nodes_per_part=32, attach=2, seed=0, feat_dim=8)[0]
+    if name == "powerlaw8":
+        return graph.synthetic_powerlaw_communities(
+            8, nodes_per_part=16, attach=1, seed=0, feat_dim=8)[0]
+    return graph.synthetic_sbm("amazon_photo_mini", seed=1)
+
+
+@pytest.mark.parametrize("name,m", sorted(GOLDEN_QUALITY))
+def test_partition_quality_regression(name, m):
+    """Multilevel must dominate BFS+KL on the benchmark graphs — cut no
+    higher (strictly lower on the power-law M=32 acceptance graph), block
+    max_deg no worse, strict balance cap — and both methods must reproduce
+    the recorded golden cuts exactly so regressions fail loudly."""
+    g = _quality_graph(name)
+    got = {}
+    for method in ("bfs_kl", "multilevel"):
+        part = graph.partition_graph(g.num_nodes, g.edges, m, seed=0,
+                                     method=method)
+        q = graph.partition_quality(g.num_nodes, g.edges, part, m)
+        assert q["balance"] <= 1.0 + 1e-9, (method, q)
+        got[method] = (q["edge_cut"], q["max_deg"])
+    ml, kl = got["multilevel"], got["bfs_kl"]
+    assert ml[0] <= kl[0], f"multilevel cut {ml[0]} above bfs_kl {kl[0]}"
+    assert ml[1] <= kl[1], f"multilevel max_deg {ml[1]} above {kl[1]}"
+    if name == "powerlaw32":            # the acceptance criterion is strict
+        assert ml[0] < kl[0]
+    assert got == GOLDEN_QUALITY[(name, m)], (
+        f"partition quality drifted from the golden record: {got} != "
+        f"{GOLDEN_QUALITY[(name, m)]} — if deliberate, re-record")
+
+
+def test_partition_method_dispatch_rejects_unknown(g):
+    with pytest.raises(ValueError):
+        graph.partition_graph(g.num_nodes, g.edges, 3, method="metis5")
+
+
+def test_partition_quality_matches_layout_max_deg(g):
+    """partition_quality.max_deg must equal the BlockCSR ELL fan-in the
+    partition induces — it is the cheap proxy the benchmarks report."""
+    for method in ("bfs_kl", "multilevel"):
+        part = graph.partition_graph(g.num_nodes, g.edges, 4, seed=0,
+                                     method=method)
+        q = graph.partition_quality(g.num_nodes, g.edges, part, 4)
+        layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                              compressed=True)
+        csr = layout.compress()
+        assert q["max_deg"] == csr.max_deg
+        assert q["nnz_blocks"] == layout.nnz_blocks
+
+
 def test_sbm_statistics():
     g = graph.synthetic_sbm("amazon_photo_mini", seed=0)
     n, n_train, n_test, k, c0, _ = graph.DATASET_STATS["amazon_photo_mini"]

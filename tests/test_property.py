@@ -47,6 +47,53 @@ def test_partition_is_a_partition(n, extra, m, seed):
     assert sizes.max() <= int(np.ceil(n / m)) + 1   # balance cap
 
 
+def _gnarly_graph(n, extra, iso, loops, seed):
+    """Random graph with the contract's corner cases baked in: ``iso``
+    trailing isolated nodes (no incident edges) and ``loops`` self-loop
+    edges (which every partitioner must ignore, not crash on)."""
+    core = max(n - iso, 2)
+    edges = _random_graph(core, extra, seed).astype(np.int32)
+    if loops:
+        rng = np.random.default_rng(seed + 1)
+        sl = rng.integers(0, n, size=loops).astype(np.int32)
+        edges = np.concatenate([edges, np.stack([sl, sl], axis=1)])
+    return edges
+
+
+@given(n=st.integers(12, 60), extra=st.integers(0, 100),
+       iso=st.integers(0, 6), loops=st.integers(0, 4),
+       m=st.integers(2, 5), seed=st.integers(0, 5),
+       method=st.sampled_from(["bfs_kl", "multilevel"]))
+@settings(**SETTINGS)
+def test_partitioner_contract(n, extra, iso, loops, m, seed, method):
+    """Both partition_graph methods share one contract, including on
+    graphs with isolated nodes and self-loops: every node assigned exactly
+    once to a valid part, sizes within the balance bound, and bit-identical
+    output for a fixed seed (determinism)."""
+    edges = _gnarly_graph(n, extra, iso, loops, seed)
+    part = graph.partition_graph(n, edges, m, seed=seed, method=method)
+    assert part.shape == (n,) and part.dtype == np.int32
+    assert part.min() >= 0 and part.max() < m       # every node assigned
+    sizes = np.bincount(part, minlength=m)
+    cap = int(np.ceil(n / m))
+    slack = 1 if method == "bfs_kl" else 0          # multilevel: strict cap
+    assert sizes.max() <= cap + slack, (method, sizes, cap)
+    again = graph.partition_graph(n, edges, m, seed=seed, method=method)
+    np.testing.assert_array_equal(part, again)      # determinism
+
+
+@given(n=st.integers(8, 40), extra=st.integers(0, 60),
+       seed=st.integers(0, 5),
+       method=st.sampled_from(["bfs_kl", "multilevel"]))
+@settings(**SETTINGS)
+def test_partitioner_single_community(n, extra, seed, method):
+    """num_parts=1 must be the trivial partition for both methods —
+    contract parity at the degenerate end."""
+    edges = _random_graph(n, extra, seed).astype(np.int32)
+    part = graph.partition_graph(n, edges, 1, seed=seed, method=method)
+    assert np.array_equal(part, np.zeros(n, dtype=np.int32))
+
+
 @given(n=st.integers(12, 48), extra=st.integers(5, 80),
        m=st.integers(2, 4), c=st.integers(1, 9), seed=st.integers(0, 5))
 @settings(**SETTINGS)
