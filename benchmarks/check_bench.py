@@ -13,7 +13,11 @@ calls this) so every push proves:
   * the multilevel partitioner strictly beats the BFS+KL stand-in on edge
     cut at M=32 (no worse max_deg / wire bytes, strict balance) and never
     cuts more than it on the trainer datasets — partition quality is the
-    lever behind every wire-byte number.
+    lever behind every wire-byte number;
+  * size-aware (bucketed) padding beats the global n_pad on the seed-0
+    size-skewed power-law graph at M=32: lower pad bytes, lower pad FLOPs,
+    and a row-exact p2p wire that undercuts the whole-block schedule and
+    stays within the uniform-graph multilevel wire (m32_ragged).
 
 Standalone: ``PYTHONPATH=src python benchmarks/check_bench.py [--root DIR]``
 Exit code 0 = all checks pass; failures raise CheckError with the path of
@@ -86,7 +90,7 @@ def check_block_sparsity(payload: dict) -> None:
 def check_speedup(payload: dict) -> None:
     where = "BENCH_speedup"
     _fields(payload, {"quick": bool, "rows": list, "m32_wire": dict,
-                      "m32_partition": dict}, where)
+                      "m32_partition": dict, "m32_ragged": dict}, where)
     modes = {r["mode"] for r in payload["rows"]}
     _require(modes == {"parallel", "compressed", "p2p", "p2p_ml"}, where,
              f"rows must cover parallel/compressed/p2p/p2p_ml, "
@@ -164,6 +168,36 @@ def check_speedup(payload: dict) -> None:
     _require(ml["wire_bytes"] <= kl["wire_bytes"], w,
              f"multilevel wire {ml['wire_bytes']} above bfs_kl "
              f"{kl['wire_bytes']}")
+
+    # ragged (size-aware) padding on the seed-0 size-skewed power-law graph
+    # at M=32: bucketed padding must undercut the global-n_pad baseline on
+    # pad bytes, pad FLOPs and scheduled wire, and the row-exact wire must
+    # not exceed the uniform-graph multilevel wire above — proving the
+    # global pad (not the size skew) was the communication cost.
+    mr = payload["m32_ragged"]
+    w = f"{where}.m32_ragged"
+    _fields(mr, {"M": int, "size_skew": numbers.Real, "modes": dict}, w)
+    _require(mr["M"] == 32, w, "ragged comparison must be at M=32")
+    _require(set(mr["modes"]) == {"global", "bucketed"}, w,
+             f"modes must cover global/bucketed, got {sorted(mr['modes'])}")
+    for mode, q in mr["modes"].items():
+        _fields(q, {"n_pad": int, "pad_rows": int, "pad_bytes": int,
+                    "pad_flops": numbers.Real, "wire_bytes": int,
+                    "true_wire_bytes": int, "p2p_rounds": int},
+                f"{w}.{mode}")
+    gl, bu = mr["modes"]["global"], mr["modes"]["bucketed"]
+    _require(bu["pad_bytes"] < gl["pad_bytes"], w,
+             f"bucketed pad_bytes {bu['pad_bytes']} not below global "
+             f"{gl['pad_bytes']}")
+    _require(bu["pad_flops"] < gl["pad_flops"], w,
+             f"bucketed pad_flops {bu['pad_flops']} not below global "
+             f"{gl['pad_flops']}")
+    _require(bu["wire_bytes"] < gl["wire_bytes"], w,
+             f"row-exact wire {bu['wire_bytes']} not below the whole-block "
+             f"wire {gl['wire_bytes']}")
+    _require(bu["wire_bytes"] <= ml["wire_bytes"], w,
+             f"ragged wire {bu['wire_bytes']} on the skewed graph exceeds "
+             f"the m32_partition multilevel wire {ml['wire_bytes']}")
 
 
 CHECKS = {

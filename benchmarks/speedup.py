@@ -218,13 +218,68 @@ def partition_comparison(m: int = 32, hidden: int = 64) -> dict:
     return out
 
 
+def ragged_comparison(m: int = 32, hidden: int = 64,
+                      size_skew: float = 1.0) -> dict:
+    """Size-aware padding head-to-head on the seed-0 size-skewed power-law
+    graph at M=32 (Zipf community sizes, large communities on the BA
+    periphery — graph.synthetic_powerlaw_communities(size_skew=...)), one
+    agent per community.  Per pad mode: the residual-padding accounting
+    (messages.pad_stats — pad rows/bytes the payloads carry, pad FLOPs the
+    block aggregation spends) and the scheduled NeighborExchange wire —
+    whole-n_pad-block messages under ``global``, row-exact payloads over
+    size-bucketed sub-rounds under ``bucketed``.  check_bench.py guards
+    that bucketed padding undercuts global on every axis and that the
+    ragged wire stays at or below the uniform-graph multilevel wire
+    (``m32_partition``) — pad waste, not size skew, was the cost.
+    """
+    import numpy as np
+    from repro.core import graph, messages
+    g, part = graph.synthetic_powerlaw_communities(
+        m, nodes_per_part=32, attach=2, seed=0, feat_dim=hidden,
+        size_skew=size_skew)
+    sizes = np.bincount(part, minlength=m)
+    out = {"M": m, "size_skew": size_skew,
+           "max_size": int(sizes.max()), "min_size": int(sizes.min()),
+           "modes": {}}
+    for pad_mode in ("global", "bucketed"):
+        layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                              compressed=True,
+                                              pad_mode=pad_mode)
+        plan = messages.build_neighbor_exchange(
+            layout.neighbor_mask, m, layout.n_pad,
+            sizes=layout.sizes if pad_mode == "bucketed" else None)
+        wire = messages.exchange_bytes(plan, [hidden])
+        pad = messages.pad_stats(layout.neighbor_mask, layout.sizes,
+                                 layout.row_counts, layout.n_pad, [hidden])
+        out["modes"][pad_mode] = {
+            "n_pad": layout.n_pad,
+            "pad_rows": pad["pad_rows"],
+            "pad_bytes": pad["pad_bytes"],
+            "pad_flops": pad["pad_flops"],
+            "pad_flop_frac": round(pad["pad_flop_frac"], 4),
+            "wire_bytes": wire["wire_bytes"],
+            "true_wire_bytes": wire["p2p_needed_bytes"],
+            "p2p_rounds": wire["num_rounds"],
+        }
+    gl, bu = out["modes"]["global"], out["modes"]["bucketed"]
+    print(f"[speedup] M={m} skew={size_skew} ragged padding: global pad "
+          f"{gl['pad_bytes']/1e3:.0f}kB/iter-payload "
+          f"({100*gl['pad_flop_frac']:.0f}% pad FLOPs), wire "
+          f"{gl['wire_bytes']/1e3:.0f}kB -> bucketed pad "
+          f"{bu['pad_bytes']/1e3:.0f}kB ({100*bu['pad_flop_frac']:.0f}%), "
+          f"row-exact wire {bu['wire_bytes']/1e3:.0f}kB over "
+          f"{bu['p2p_rounds']} rounds")
+    return out
+
+
 def main(quick: bool = False, out: "str | None" = None):
     if quick:
         rows = run(epochs=2, hidden=32, datasets=("amazon_photo_mini",))
     else:
         rows = run()
     payload = {"quick": quick, "rows": rows, "m32_wire": wire_comparison(),
-               "m32_partition": partition_comparison()}
+               "m32_partition": partition_comparison(),
+               "m32_ragged": ragged_comparison()}
     out_path = pathlib.Path(out) if out else \
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_speedup.json"
     out_path.write_text(json.dumps(payload, indent=2))

@@ -44,6 +44,17 @@ def main():
                          "→uncoarsen (METIS scheme, sharding.multilevel — "
                          "lower edge cut, hence less p2p wire) or the "
                          "BFS-grow + Kernighan-Lin stand-in (bfs_kl)")
+    ap.add_argument("--pad-mode", default="bucketed",
+                    choices=["global", "bucketed"],
+                    help="community padding: one global n_pad (every "
+                         "community padded to the largest) or size-aware "
+                         "power-of-two-ish buckets — pad FLOPs are guarded "
+                         "out of the ELL kernel and the p2p exchange wires "
+                         "row-exact payloads (true rows only)")
+    ap.add_argument("--adjacency-bf16", action="store_true",
+                    help="store the ELL adjacency blocks in bf16 (half the "
+                         "resident bytes; aggregation still accumulates "
+                         "f32) — requires --compressed")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -66,7 +77,9 @@ def main():
                                   compressed=args.compressed,
                                   use_kernel=args.use_kernel,
                                   transport=args.transport,
-                                  part=part, partitioner=args.partitioner)
+                                  part=part, partitioner=args.partitioner,
+                                  pad_mode=args.pad_mode,
+                                  adjacency_bf16=args.adjacency_bf16)
     print(f"mesh: {dict(trainer.mesh.shape)}; neighbour topology:\n"
           f"{np.asarray(trainer.data.neighbor_mask).astype(int)}")
     cs = trainer.comm_stats
@@ -76,8 +89,18 @@ def main():
           f"({cs['nnz_blocks']}/{cs['dense_blocks']} blocks, "
           f"{100 * cs['savings_ratio']:.0f}% saved), scheduled wire "
           f"{cs['wire_bytes'] / 1e6:.2f} MB")
+    sizes = trainer.layout.sizes
+    print(f"padding [{cs['pad_mode']}]: community sizes "
+          f"{int(sizes.min())}..{int(sizes.max())} padded to "
+          f"{'per-size buckets' if args.pad_mode == 'bucketed' else 'one'} "
+          f"n_pad={trainer.layout.n_pad}; residual pad rows "
+          f"{cs['pad_rows']} -> {cs['pad_bytes'] / 1e3:.1f} kB payload "
+          f"padding and {cs['pad_flops'] / 1e6:.1f} MFLOP "
+          f"({100 * cs['pad_flop_frac']:.1f}%) pad work per iteration")
     adj = cs["adjacency"]
-    mode = "compressed (ELL)" if args.compressed else "dense"
+    mode = "compressed (ELL"
+    mode += ", bf16 blocks)" if args.adjacency_bf16 else ")"
+    mode = mode if args.compressed else "dense"
     print(f"adjacency on device [{mode}]: {adj['resident_bytes'] / 1e6:.2f} "
           f"MB (dense would be {adj['dense_bytes'] / 1e6:.2f} MB, "
           f"max_deg {adj['max_deg']})")

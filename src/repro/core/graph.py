@@ -145,6 +145,46 @@ def edge_cut(edges: Array, part: Array) -> int:
     return int(np.sum(part[edges[:, 0]] != part[edges[:, 1]]))
 
 
+# ---------------------------------------------------------------------------
+# size-aware (ragged) padding: bucket scheme
+# ---------------------------------------------------------------------------
+
+def pad_ladder(limit: int) -> list[int]:
+    """The power-of-two-ish pad bucket boundaries up to ``limit``.
+
+    All values are multiples of 8 (TPU sublane) and the ladder is geometric
+    — {8, 16, 24, 32, 48, 64, 96, 128, 192, 256, ...}: ratio 2 on the
+    single smallest step (8→16, the sublane floor) and ≤ 1.5 from 16 up —
+    so bucketed padding wastes at most ~44% of a tiny community's rows
+    (size 9 → bucket 16) and ~33% beyond the first step, where the
+    global-max pad wastes up to ``n_pad / size``.
+    """
+    vals = {8}
+    k = 16
+    while k <= max(int(limit), 8) * 2:
+        vals.add(k)
+        vals.add(3 * k // 2)
+        k *= 2
+    return sorted(vals)
+
+
+def bucket_pad_sizes(sizes, n_pad: int) -> Array:
+    """Per-community padded row counts under the bucket scheme.
+
+    Each community pads to the smallest ladder bucket ≥ its size, capped at
+    the layout's physical ``n_pad`` stride (communities in the top bucket
+    keep the global pad).  Empty communities pad to zero rows.
+    """
+    ladder = pad_ladder(n_pad)
+    out = np.zeros(len(sizes), dtype=np.int32)
+    for i, s in enumerate(np.asarray(sizes)):
+        if s <= 0:
+            continue
+        b = next((v for v in ladder if v >= s), ladder[-1])
+        out[i] = min(int(b), int(n_pad))
+    return out
+
+
 def partition_quality(num_nodes: int, edges: Array, part: Array,
                       num_parts: int | None = None) -> dict:
     """Quality metrics a partition method is judged on (host-side, cheap).
@@ -169,6 +209,11 @@ def partition_quality(num_nodes: int, edges: Array, part: Array,
     nbr[pv, pu] = True
     np.fill_diagonal(nbr, True)
     cut = edge_cut(edges, part)
+    # padding the layout will pay for this partition's size skew: the global
+    # scheme pads every community to max(sizes) (8-aligned), the bucket
+    # scheme to its own power-of-two-ish bucket (bucket_pad_sizes)
+    n_pad = -(-int(sizes.max()) // 8) * 8
+    bucketed = bucket_pad_sizes(sizes, n_pad)
     return {
         "num_parts": m,
         "edge_cut": cut,
@@ -178,6 +223,9 @@ def partition_quality(num_nodes: int, edges: Array, part: Array,
         "max_size": int(sizes.max()),
         "max_deg": int(nbr.sum(axis=1).max()),
         "nnz_blocks": int(nbr.sum()),
+        "n_pad": n_pad,
+        "pad_rows_global": int(m * n_pad - sizes.sum()),
+        "pad_rows_bucketed": int(bucketed.sum() - sizes.sum()),
     }
 
 
@@ -228,6 +276,12 @@ class BlockCSR:
       * ELL (``ell_indices``/``ell_mask`` into ``ell_blocks``) — every row
         padded to the max fan-in ``max_deg``, fixed-shape and therefore the
         jit/vmap-friendly form the aggregation kernels consume.
+
+    The layout is ragged-aware: ``sizes``/``row_counts`` carry the true and
+    padded-per-bucket rows of every community (CommunityLayout), so block
+    (m, r) holds real data only in its leading ``(sizes[m], sizes[r])``
+    corner — the ELL kernel guards the pad rows out of the DMA+accumulate
+    via the scalar-prefetched counts (``ell_row_counts``).
     """
 
     num_parts: int
@@ -238,6 +292,8 @@ class BlockCSR:
     ell_indices: Array  # (M, max_deg) int32 (rows padded with index 0)
     ell_mask: Array     # (M, max_deg) float32 (1 = real block, 0 = pad)
     ell_blocks: Array   # (M, max_deg, n_pad, n_pad) float32
+    sizes: "Array | None" = None       # (M,) true rows per community
+    row_counts: "Array | None" = None  # (M,) padded rows (bucket scheme)
 
     @property
     def nnz(self) -> int:
@@ -271,8 +327,29 @@ class BlockCSR:
         sl = slice(shard * k, (shard + 1) * k)
         return self.ell_blocks[sl], self.ell_indices[sl], self.ell_mask[sl]
 
+    def ell_row_counts(self) -> tuple[Array, Array]:
+        """Per-lane and per-neighbour padded row counts for the ELL kernel.
+
+        Returns ``(row_counts, nbr_counts)``: (M,) rows each output lane
+        owns and (M, max_deg) rows each stored neighbour block contributes
+        (0 on padding slots).  With no ragged metadata both default to the
+        full ``n_pad`` — the global-pad behaviour.
+        """
+        m = self.num_parts
+        if self.row_counts is None:
+            rows = np.full(m, self.n_pad, dtype=np.int32)
+        else:
+            rows = np.asarray(self.row_counts, dtype=np.int32)
+        nbr = rows[self.ell_indices] * (np.asarray(self.ell_mask) > 0)
+        return rows, nbr.astype(np.int32)
+
     def to_dense(self) -> Array:
-        """Reconstruct the dense (M, M, n_pad, n_pad) block tensor."""
+        """Reconstruct the dense (M, M, n_pad, n_pad) block tensor.
+
+        Ragged layouts reconstruct identically: pad rows/cols of every
+        stored block are zero by construction (asserted in tests), so the
+        dense tensor is the same whether counts are tracked or not.
+        """
         m, n = self.num_parts, self.n_pad
         out = np.zeros((m, m, n, n), dtype=np.float32)
         for row in range(m):
@@ -285,14 +362,23 @@ class BlockCSR:
         """Σ_{r∈N_m} Ã_{m,r} Z_r via the ELL view — O(nnz·n_pad²·C) FLOPs.
 
         z_all: (M, n_pad, C) -> (M, n_pad, C).  Host-side (numpy) twin of
-        kernels.ops.community_spmm_ell — keep the two contractions in sync.
+        kernels.ops.community_spmm_ell — keep the two contractions in sync:
+        like the kernel, pad rows beyond ``row_counts`` are masked out of
+        the contraction (a numerical no-op — they are zero — that keeps
+        this oracle's semantics identical to the guarded kernel).
         """
+        rows, nbr_rows = self.ell_row_counts()
+        lane = np.arange(self.n_pad)
         z_g = z_all[self.ell_indices]                # (M, max_deg, n_pad, C)
         z_g = z_g * self.ell_mask[..., None, None]
-        return np.einsum("mdip,mdpc->mic", self.ell_blocks, z_g)
+        z_g = z_g * (lane[None, None, :, None] < nbr_rows[..., None, None])
+        out = np.einsum("mdip,mdpc->mic", self.ell_blocks, z_g)
+        return out * (lane[None, :, None] < rows[:, None, None])
 
 
-def compress_blocks(a_blocks: Array, neighbor_mask: Array) -> BlockCSR:
+def compress_blocks(a_blocks: Array, neighbor_mask: Array,
+                    sizes: Array | None = None,
+                    row_counts: Array | None = None) -> BlockCSR:
     """Build the CSR-of-blocks + ELL views from a dense block tensor."""
     m, _, n_pad, _ = a_blocks.shape
     nbr = np.asarray(neighbor_mask, bool)
@@ -320,7 +406,7 @@ def compress_blocks(a_blocks: Array, neighbor_mask: Array) -> BlockCSR:
         ell_blocks[row, :d] = blocks[lo:hi]
     return BlockCSR(num_parts=m, n_pad=n_pad, indptr=indptr, indices=indices,
                     blocks=blocks, ell_indices=ell_indices, ell_mask=ell_mask,
-                    ell_blocks=ell_blocks)
+                    ell_blocks=ell_blocks, sizes=sizes, row_counts=row_counts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -328,11 +414,24 @@ class CommunityLayout:
     """Community-blocked layout of a graph (paper §2, Fig. 1).
 
     Nodes are permuted so community m occupies rows [m*n_pad, m*n_pad+n_m);
-    every community is padded to ``n_pad``. ``a_blocks[m, r]`` is the dense
-    Ã_{m,r} block; ``neighbor_mask[m, r]`` marks r ∈ N_m ∪ {m} (nonzero
-    blocks) — the paper's first-order communication topology.  When built
-    with ``compressed=True``, ``block_csr`` additionally stores only the
-    present blocks (CSR-of-blocks / ELL; O(nnz·n_pad²) memory).
+    the *physical* stride between communities is ``n_pad`` (the global max,
+    8-aligned) so every packed tensor keeps a fixed (M, n_pad, ...) shape.
+    ``a_blocks[m, r]`` is the dense Ã_{m,r} block; ``neighbor_mask[m, r]``
+    marks r ∈ N_m ∪ {m} (nonzero blocks) — the paper's first-order
+    communication topology.  When built with ``compressed=True``,
+    ``block_csr`` additionally stores only the present blocks
+    (CSR-of-blocks / ELL; O(nnz·n_pad²) memory).
+
+    Ragged (size-aware) padding: ``row_counts[m]`` is the number of rows
+    community m is *logically* padded to.  Under ``pad_mode="global"`` it is
+    ``n_pad`` everywhere (the historic behaviour); under
+    ``pad_mode="bucketed"`` each community pads only to its power-of-two-ish
+    size bucket (``bucket_pad_sizes``), so pad FLOPs (ELL kernel row-count
+    guards), pad wire bytes (row-exact NeighborExchange payloads) and the
+    ragged ``blockify`` representation all track true community size instead
+    of the single largest community.  Rows in [sizes[m], n_pad) are zero in
+    every packed tensor either way — bucketing changes what is *processed*
+    and *wired*, never the math.
     """
 
     num_parts: int
@@ -343,17 +442,69 @@ class CommunityLayout:
     neighbor_mask: Array   # (M, M) bool
     sizes: Array           # (M,) int
     block_csr: "BlockCSR | None" = None
+    row_counts: "Array | None" = None   # (M,) int32 — logical pad per community
+    pad_mode: str = "global"
 
     @property
     def nnz_blocks(self) -> int:
         return int(np.asarray(self.neighbor_mask).sum())
+
+    @property
+    def pad_rows(self) -> int:
+        """Logical padding rows this layout carries (Σ row_counts − Σ sizes)."""
+        return int(np.sum(self.eff_row_counts()) - np.sum(self.sizes))
+
+    def eff_row_counts(self) -> Array:
+        """(M,) effective per-community padded row counts (global fallback)."""
+        if self.row_counts is None:
+            return np.full(self.num_parts, self.n_pad, dtype=np.int32)
+        return np.asarray(self.row_counts, dtype=np.int32)
+
+    def row_offsets(self) -> Array:
+        """(M+1,) ragged row offsets of the ``blockify`` representation."""
+        return np.concatenate(
+            [[0], np.cumsum(self.eff_row_counts())]).astype(np.int64)
 
     def compress(self) -> BlockCSR:
         """CSR-of-blocks view of ``a_blocks`` (cached when built with
         ``compressed=True``)."""
         if self.block_csr is not None:
             return self.block_csr
-        return compress_blocks(self.a_blocks, self.neighbor_mask)
+        return compress_blocks(self.a_blocks, self.neighbor_mask,
+                               sizes=self.sizes, row_counts=self.row_counts)
+
+    def blockify(self, x: Array, fill: float = 0.0) -> Array:
+        """(N, ...) node array -> ragged (R, ...) community-blocked array.
+
+        The ragged twin of ``pack``: community m occupies rows
+        [row_offsets()[m], row_offsets()[m] + row_counts[m]) with its
+        ``sizes[m]`` real rows first, padded to its *bucket* (not the global
+        ``n_pad``), so R = Σ_m row_counts[m] ≤ M·n_pad — the resident-bytes
+        win of size-aware padding, exact for any size distribution.
+        """
+        counts = self.eff_row_counts()
+        offs = self.row_offsets()
+        out = np.full((int(offs[-1]),) + x.shape[1:], fill, dtype=x.dtype)
+        for m in range(self.num_parts):
+            members = self.perm[m * self.n_pad:
+                                m * self.n_pad + int(self.sizes[m])]
+            assert int(self.sizes[m]) <= int(counts[m]), \
+                f"community {m}: {self.sizes[m]} rows exceed its " \
+                f"{counts[m]}-row bucket"
+            out[offs[m]: offs[m] + int(self.sizes[m])] = x[members]
+        return out
+
+    def unblockify(self, x: Array) -> Array:
+        """Ragged (R, ...) -> (N, ...) in original node order (inverse of
+        ``blockify`` on the real rows; pad rows are discarded)."""
+        offs = self.row_offsets()
+        n = int((self.perm >= 0).sum())
+        out = np.zeros((n,) + x.shape[1:], dtype=x.dtype)
+        for m in range(self.num_parts):
+            members = self.perm[m * self.n_pad:
+                                m * self.n_pad + int(self.sizes[m])]
+            out[members] = x[offs[m]: offs[m] + int(self.sizes[m])]
+        return out
 
     def pack(self, x: Array, fill: float = 0.0) -> Array:
         """(N, ...) node array -> (M, n_pad, ...) community-blocked array."""
@@ -375,12 +526,33 @@ class CommunityLayout:
 
 def build_community_layout(num_nodes: int, edges: Array, part: Array,
                            pad_to: int | None = None,
-                           compressed: bool = False) -> CommunityLayout:
-    num_parts = int(part.max()) + 1
+                           compressed: bool = False,
+                           pad_mode: str = "global",
+                           num_parts: int | None = None) -> CommunityLayout:
+    """``pad_mode``: "global" pads every community to the max size (the
+    historic layout); "bucketed" additionally records per-community
+    ``row_counts`` under the power-of-two-ish bucket scheme
+    (``bucket_pad_sizes``) that the ragged consumers (ELL kernel guards,
+    row-exact exchange, ``blockify``) key off.  ``num_parts`` forces the
+    community count (trailing empty communities are otherwise dropped)."""
+    if pad_mode not in ("global", "bucketed"):
+        raise ValueError(f"unknown pad_mode {pad_mode!r}; "
+                         f"expected 'global' or 'bucketed'")
+    used = int(part.max()) + 1 if len(part) else 1
+    if num_parts is None:
+        num_parts = used
+    elif int(num_parts) < used:
+        raise ValueError(f"num_parts={num_parts} below the {used} "
+                         f"communities present in part — pass a partition "
+                         f"that fits or raise num_parts")
+    else:
+        num_parts = int(num_parts)
     sizes = np.bincount(part, minlength=num_parts)
     n_pad = int(sizes.max()) if pad_to is None else int(pad_to)
     # round pad up to a multiple of 8 (TPU sublane) for kernel friendliness
     n_pad = -(-n_pad // 8) * 8
+    row_counts = bucket_pad_sizes(sizes, n_pad) if pad_mode == "bucketed" \
+        else None
 
     a_tilde = normalized_adjacency(num_nodes, edges)
     perm = np.full(num_parts * n_pad, -1, dtype=np.int64)
@@ -400,11 +572,13 @@ def build_community_layout(num_nodes: int, edges: Array, part: Array,
     neighbor_mask = (np.abs(a_blocks).sum(axis=(2, 3)) > 0)
     np.fill_diagonal(neighbor_mask, True)
     a_blocks = a_blocks.astype(np.float32)
-    csr = compress_blocks(a_blocks, neighbor_mask) if compressed else None
+    csr = compress_blocks(a_blocks, neighbor_mask, sizes=sizes,
+                          row_counts=row_counts) if compressed else None
     return CommunityLayout(num_parts=num_parts, n_pad=n_pad, perm=perm,
                            a_blocks=a_blocks,
                            node_mask=node_mask, neighbor_mask=neighbor_mask,
-                           sizes=sizes, block_csr=csr)
+                           sizes=sizes, block_csr=csr,
+                           row_counts=row_counts, pad_mode=pad_mode)
 
 
 # ---------------------------------------------------------------------------
@@ -417,28 +591,60 @@ def build_community_layout(num_nodes: int, edges: Array, part: Array,
 def synthetic_powerlaw_communities(num_parts: int, nodes_per_part: int = 32,
                                    attach: int = 2, p_in: float = 0.3,
                                    inter_edges: int = 4, seed: int = 0,
-                                   num_classes: int = 4, feat_dim: int = 16
+                                   num_classes: int = 4, feat_dim: int = 16,
+                                   size_skew: float = 0.0
                                    ) -> tuple[Graph, Array]:
     """Graph of M dense communities whose *inter-community* topology is a
     preferential-attachment (Barabási–Albert) graph: block fan-in follows a
     power law, so nnz Ã blocks grows ~O(M·attach) while the dense layout is
     O(M²) — the regime where block compression and neighbour-only
     communication pay off.  Returns (graph, ground-truth partition).
+
+    ``size_skew > 0`` makes the *community sizes themselves* power-law
+    distributed (size ∝ rank^-skew, total held at M·nodes_per_part, min
+    size 1), with the LARGE communities at the high (late, BA-peripheral)
+    indices and the early hubs small — a dense small core relaying between
+    big leaf communities.  Keeping size anti-correlated with block degree
+    makes the benchmark isolate *padding* waste: the irreducible (true-row)
+    wire volume stays comparable to the uniform graph's, so any global-pad
+    overhead measured against it is pure pad bytes.  This is the regime
+    where a single global ``n_pad`` wastes pad FLOPs/bytes proportional to
+    the skew and size-aware (bucketed) padding pays (BENCH_speedup.json
+    ``m32_ragged``).  ``size_skew=0`` reproduces the historic equal-size
+    graphs bit-for-bit (same rng stream).
     """
     rng = np.random.default_rng(seed)
     m, n_c = num_parts, nodes_per_part
-    n = m * n_c
-    part = np.repeat(np.arange(m, dtype=np.int32), n_c)
+    if size_skew > 0:
+        w = (np.arange(m) + 1.0) ** (-float(size_skew))
+        w = w[::-1]                              # big sizes on the leaves
+        sizes = np.maximum(1, np.floor(w / w.sum() * (m * n_c)).astype(int))
+        # restore N == M·nodes_per_part: the min-size-1 bumps can overshoot
+        # the floor() undershoot at extreme skew, so walk the correction
+        # from the largest community down, never dropping any below 1
+        delta = m * n_c - int(sizes.sum())
+        i = m - 1
+        while delta < 0 and i >= 0:
+            take = min(int(sizes[i]) - 1, -delta)
+            sizes[i] -= take
+            delta += take
+            i -= 1
+        sizes[-1] += delta
+    else:
+        sizes = np.full(m, n_c, dtype=int)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+    n = int(offsets[-1])
+    part = np.repeat(np.arange(m, dtype=np.int32), sizes)
 
     edges: list[tuple[int, int]] = []
     # dense intra-community structure (ER with p_in, plus a ring so every
     # community is connected)
     for c in range(m):
-        base = c * n_c
-        for i in range(n_c):
-            edges.append((base + i, base + (i + 1) % n_c))
+        base, n_cc = int(offsets[c]), int(sizes[c])
+        for i in range(n_cc):
+            edges.append((base + i, base + (i + 1) % n_cc))
         pairs = np.argwhere(
-            np.triu(rng.random((n_c, n_c)) < p_in, k=2))
+            np.triu(rng.random((n_cc, n_cc)) < p_in, k=2))
         edges.extend((base + int(i), base + int(j)) for i, j in pairs)
 
     # preferential attachment over communities
@@ -455,8 +661,8 @@ def synthetic_powerlaw_communities(num_parts: int, nodes_per_part: int = 32,
     # each community edge becomes a few node-level bridge edges
     for c1, c2 in sorted(com_edges):
         for _ in range(inter_edges):
-            u = c1 * n_c + int(rng.integers(n_c))
-            v = c2 * n_c + int(rng.integers(n_c))
+            u = int(offsets[c1]) + int(rng.integers(sizes[c1]))
+            v = int(offsets[c2]) + int(rng.integers(sizes[c2]))
             edges.append((u, v))
 
     e = np.unique(np.sort(np.asarray(edges, dtype=np.int32), axis=1), axis=0)

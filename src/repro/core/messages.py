@@ -92,24 +92,73 @@ def adjacency_bytes(neighbor_mask, n_pad: int, itemsize: int = 4) -> dict:
     mesh); ``ell_bytes`` is the block-compressed (ELL) payload the
     compressed trainer holds instead — M·max_deg blocks plus the int32
     index / float32 mask planes; ``csr_bytes`` is the tighter
-    CSR-of-blocks bound (nnz blocks, host-side).  On power-law community
-    graphs max_deg is ~constant in M, so ell_bytes grows ~linearly while
-    dense_bytes grows quadratically.
+    CSR-of-blocks bound (nnz blocks, host-side).  ``itemsize`` is the ELL
+    *block-store* element size (2 with ``adjacency_bf16``) — it scales
+    only ``ell_bytes``; the dense and CSR baselines are always the f32
+    tensors those representations actually are, so ``ell_ratio`` shows
+    the bf16 win instead of silently halving the comparison point.  On
+    power-law community graphs max_deg is ~constant in M, so ell_bytes
+    grows ~linearly while dense_bytes grows quadratically.
     """
     nbr = np.asarray(neighbor_mask)
     m = nbr.shape[0]
     deg = nbr.sum(axis=1)
     max_deg = int(deg.max()) if m else 0
     nnz = int(nbr.sum())
-    block = n_pad * n_pad * itemsize
+    block = n_pad * n_pad
+    dense = m * m * block * 4
+    ell = m * max_deg * (block * itemsize + 4 + 4)
     return {
-        "dense_bytes": m * m * block,
-        "ell_bytes": m * max_deg * (block + 4 + 4),
-        "csr_bytes": nnz * block,
+        "dense_bytes": dense,
+        "ell_bytes": ell,
+        "csr_bytes": nnz * block * 4,
         "nnz_blocks": nnz,
         "max_deg": max_deg,
-        "ell_ratio": (m * max_deg * (block + 8)) / (m * m * block)
-        if m else 0.0,
+        "block_itemsize": itemsize,
+        "ell_ratio": ell / dense if m else 0.0,
+    }
+
+
+def pad_stats(neighbor_mask, sizes, row_counts, n_pad: int,
+              feature_dims: Sequence[int], itemsize: int = 4) -> dict:
+    """Residual-padding accounting of a (possibly ragged) layout.
+
+    ``sizes`` are the true community row counts, ``row_counts`` the padded
+    counts actually processed (None = the global ``n_pad`` everywhere).
+    Per ADMM iteration (one payload per entry of ``feature_dims``, the same
+    convention as ``gather_bytes``):
+
+      * ``pad_rows`` / ``pad_bytes`` — payload rows (bytes) that carry
+        padding, Σ_m (row_counts[m] − sizes[m]);
+      * ``pad_flops`` — MXU work the block aggregation spends on pad
+        rows/cols: Σ_{(m,r)∈nbr} 2·C·(rc_m·rc_r − s_m·s_r), i.e. processed
+        minus irreducible true-row FLOPs (the ELL kernel's row-count guards
+        skip pad work at tile granularity; this is the row-exact bound).
+
+    Bucketed row_counts shrink both against the global-pad baseline on any
+    size-skewed partition — the drop CI guards via BENCH_speedup.json's
+    ``m32_ragged`` section.
+    """
+    nbr = np.asarray(neighbor_mask, bool)
+    s = np.asarray(sizes, dtype=np.int64)
+    rc = np.full(s.shape, n_pad, dtype=np.int64) if row_counts is None \
+        else np.asarray(row_counts, dtype=np.int64)
+    if (rc < s).any():
+        raise ValueError("row_counts below true community sizes")
+    total_c = int(np.sum(list(feature_dims)))
+    pad_rows = int((rc - s).sum())
+    processed = float(np.outer(rc, rc)[nbr].sum())
+    true = float(np.outer(s, s)[nbr].sum())
+    agg_flops = 2.0 * total_c * processed
+    pad_flops = 2.0 * total_c * (processed - true)
+    return {
+        "pad_rows": pad_rows,
+        "pad_bytes": pad_rows * total_c * itemsize,
+        "pad_flops": pad_flops,
+        "agg_flops": agg_flops,
+        "pad_flop_frac": pad_flops / agg_flops if agg_flops else 0.0,
+        "padded_rows_total": int(rc.sum()),
+        "true_rows_total": int(s.sum()),
     }
 
 
@@ -121,21 +170,25 @@ def adjacency_bytes(neighbor_mask, n_pad: int, itemsize: int = 4) -> dict:
 class ExchangeRound:
     """One ``lax.ppermute`` round of the neighbour exchange.
 
-    All shards run the round SPMD with the same ``(rows_pad, n_pad, C)``
-    buffer shape; only the ``pairs`` actually transmit.  ``send_idx[s]``
-    lists the *local lane* indices shard s packs (0-padded past its true
-    row count); ``recv_slot[s]`` the receive-buffer slots the arriving rows
+    All shards run the round SPMD with the same ``(rows_pad, C)`` buffer
+    shape; only the ``pairs`` actually transmit.  Rows are *node* rows: a
+    community contributes only its true ``sizes[r]`` rows (row-exact), or
+    all ``n_pad`` rows when the plan was built without sizes (the
+    global-pad / whole-block behaviour).  ``send_idx[s]`` lists the flat
+    local node-row indices (into the (k·n_pad, C)-flattened local payload)
+    shard s packs, 0-padded past its true row count; ``recv_slot[s]`` the
+    flat receive-buffer rows (into (r_pad·n_pad, C)) the arriving rows
     scatter into, with pad positions pointing one past the buffer end so a
     ``mode='drop'`` scatter discards them.  For each pair both tables are
-    written from the same ordered id list, so slot t on the source lines up
-    with slot t on the destination.
+    written from the same ordered row list, so row t on the source lines up
+    with row t on the destination.
     """
     offset: int                      # ring offset (dst - src) mod n_shards
     pairs: tuple[tuple[int, int], ...]
-    rows_pad: int                    # padded rows per participating shard
-    send_idx: np.ndarray             # (n_shards, rows_pad) int32 local lanes
-    recv_slot: np.ndarray            # (n_shards, rows_pad) int32; r_pad=drop
-    true_rows: int                   # Σ real rows over pairs (no padding)
+    rows_pad: int                    # padded node rows per participating shard
+    send_idx: np.ndarray             # (n_shards, rows_pad) int32 flat rows
+    recv_slot: np.ndarray            # (n_shards, rows_pad) int32; OOB=drop
+    true_rows: int                   # Σ real node rows over pairs (no padding)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,11 +202,18 @@ class NeighborExchange:
     (src shard → dst shard, list of community ids) are coloured into
     ``ppermute`` rounds by ring offset (sharding.partition.
     ring_round_coloring), so one exchange is ``len(rounds)`` static
-    collective-permutes moving ``(rows_pad, n_pad, C)`` buffers — no
+    collective-permutes moving ``(rows_pad, C)`` node-row buffers — no
     ``(M, n_pad, C)`` gathered tensor is ever materialised.  Receive
     buffers are lane-major: ``(r_pad, n_pad, C)`` with each shard's own
     lanes and neighbour rows at the slots ``localize_indices`` remaps the
     ELL indices onto.
+
+    Row-exact mode (``sizes`` given, ``row_exact=True``): each wired
+    community contributes only its true node rows, so on a size-skewed
+    partition the wire volume tracks Σ sizes over cross-shard messages
+    instead of (#messages)·n_pad — the pad rows never leave the device.
+    Receive-buffer rows past a community's size simply stay zero, exactly
+    the value the whole-block transport would have delivered.
     """
     n_shards: int
     lanes_per_shard: int
@@ -162,6 +222,8 @@ class NeighborExchange:
     needed_ids: tuple[tuple[int, ...], ...]   # per shard, slot -> global id
     own_slots: np.ndarray            # (n_shards, k) int32
     rounds: tuple[ExchangeRound, ...]
+    sizes: tuple[int, ...] = ()      # per community wired rows (n_pad if not
+    row_exact: bool = False          # row-exact)
 
     @property
     def num_rounds(self) -> int:
@@ -192,9 +254,15 @@ class NeighborExchange:
         return out
 
 
-def build_neighbor_exchange(neighbor_mask, n_shards: int,
-                            n_pad: int) -> NeighborExchange:
-    """Construct the static round schedule for a community topology."""
+def build_neighbor_exchange(neighbor_mask, n_shards: int, n_pad: int,
+                            sizes=None) -> NeighborExchange:
+    """Construct the static round schedule for a community topology.
+
+    ``sizes`` (optional, (M,) true rows per community) switches the plan to
+    row-exact packing: each cross-shard message carries only the true node
+    rows of its communities.  Without it every community wires all
+    ``n_pad`` rows — byte-identical to the historic whole-block schedule.
+    """
     from repro.core.graph import shard_neighbor_graph
     from repro.sharding.partition import ring_round_coloring
 
@@ -202,6 +270,11 @@ def build_neighbor_exchange(neighbor_mask, n_shards: int,
     m = nbr.shape[0]
     needed, _ = shard_neighbor_graph(nbr, n_shards)
     k = m // n_shards
+    row_exact = sizes is not None
+    wired = np.full(m, n_pad, dtype=np.int64) if sizes is None \
+        else np.asarray(sizes, dtype=np.int64)
+    if wired.shape != (m,) or (wired < 0).any() or (wired > n_pad).any():
+        raise ValueError(f"sizes must be (M,) in [0, n_pad={n_pad}]")
     r_pad = max(len(ids) for ids in needed)
     slot_of = [{int(r): i for i, r in enumerate(ids)} for ids in needed]
 
@@ -219,25 +292,64 @@ def build_neighbor_exchange(neighbor_mask, n_shards: int,
                 msgs.setdefault((src, dst), []).append(int(r))
     colored = ring_round_coloring(msgs.keys(), n_shards)
 
+    def msg_rows(pair):                 # true node rows of one message
+        return int(sum(wired[r] for r in msgs[pair]))
+
     rounds = []
     for offset, pairs in colored.items():
-        rows_pad = max(len(msgs[p]) for p in pairs)
-        send_idx = np.zeros((n_shards, rows_pad), dtype=np.int32)
-        recv_slot = np.full((n_shards, rows_pad), r_pad, dtype=np.int32)
-        for src, dst in pairs:
-            ids = msgs[(src, dst)]
-            for t, r in enumerate(ids):
-                send_idx[src, t] = r - src * k
-                recv_slot[dst, t] = slot_of[dst][r]
-        rounds.append(ExchangeRound(
-            offset=offset, pairs=tuple(pairs), rows_pad=rows_pad,
-            send_idx=send_idx, recv_slot=recv_slot,
-            true_rows=sum(len(msgs[p]) for p in pairs)))
+        # Row-exact plans may split a colour round into power-of-two
+        # size-bucketed sub-rounds: every round's buffer pads to its
+        # largest message, so letting a 10-row and a 500-row message share
+        # a round would wire 490 pad rows — grouping pairs whose row
+        # counts share a bucket bounds round padding by the bucket ratio
+        # (< 2×) instead of the offset's largest message.  Each sub-round
+        # is a subset of a partial permutation, hence still one.  The
+        # split is taken only when it at least halves the round's
+        # scheduled wire: each extra round is an extra collective launch
+        # whose SPMD buffer every shard materialises, so on near-uniform
+        # message sizes (where padding is small anyway) one round per
+        # offset stays cheaper end-to-end.  Whole-block plans always keep
+        # one round per offset (all messages are count·n_pad rows — the
+        # historic schedule, byte-identical).
+        grouped = [list(pairs)]
+        if row_exact:
+            groups: dict[int, list] = {}
+            for p in pairs:
+                rows = msg_rows(p)
+                bucket = 1 << max(0, int(np.ceil(np.log2(max(1, rows)))))
+                groups.setdefault(bucket, []).append(p)
+            split = [grp for _, grp in sorted(groups.items())]
+            plain_wire = len(pairs) * max(msg_rows(p) for p in pairs)
+            split_wire = sum(len(g) * max(msg_rows(p) for p in g)
+                             for g in split)
+            if 2 * split_wire <= plain_wire:
+                grouped = split
+        for grp in grouped:
+            rows_pad = max(msg_rows(p) for p in grp)
+            if rows_pad == 0:
+                continue                # all-empty messages: nothing to wire
+            send_idx = np.zeros((n_shards, rows_pad), dtype=np.int32)
+            recv_slot = np.full((n_shards, rows_pad), r_pad * n_pad,
+                                dtype=np.int32)
+            for src, dst in grp:
+                t = 0
+                for r in msgs[(src, dst)]:
+                    rows = int(wired[r])
+                    send_idx[src, t:t + rows] = \
+                        (r - src * k) * n_pad + np.arange(rows)
+                    recv_slot[dst, t:t + rows] = \
+                        slot_of[dst][r] * n_pad + np.arange(rows)
+                    t += rows
+            rounds.append(ExchangeRound(
+                offset=offset, pairs=tuple(grp), rows_pad=rows_pad,
+                send_idx=send_idx, recv_slot=recv_slot,
+                true_rows=sum(msg_rows(p) for p in grp)))
 
     return NeighborExchange(
         n_shards=n_shards, lanes_per_shard=k, n_pad=n_pad, r_pad=r_pad,
         needed_ids=tuple(tuple(int(r) for r in ids) for ids in needed),
-        own_slots=own_slots, rounds=tuple(rounds))
+        own_slots=own_slots, rounds=tuple(rounds),
+        sizes=tuple(int(v) for v in wired), row_exact=row_exact)
 
 
 def bf16_wire(collective, payload: Array) -> Array:
@@ -278,17 +390,25 @@ def exchange_neighbors(plan: NeighborExchange, x_loc: Array, axis: str,
         return x_loc
     sid = jax.lax.axis_index(axis)
     dt = x_loc.dtype
-    buf = jnp.zeros((plan.r_pad,) + x_loc.shape[1:], dt)
-    buf = buf.at[jnp.asarray(plan.own_slots)[sid]].set(x_loc)
+    k, n = x_loc.shape[0], x_loc.shape[1]
+    feat = x_loc.shape[2:]
+    # node-row-flat views: send rows are gathered (and receive rows
+    # scattered) at single-node granularity so row-exact plans wire only
+    # the true rows of each community
+    x_flat = x_loc.reshape((k * n,) + feat)
+    buf = jnp.zeros((plan.r_pad * n,) + feat, dt)
+    own = jnp.asarray(plan.own_slots)[sid]                    # (k,)
+    own_flat = (own[:, None] * n + jnp.arange(n)[None, :]).reshape(-1)
+    buf = buf.at[own_flat].set(x_flat)
     for rnd in plan.rounds:
-        payload = x_loc[jnp.asarray(rnd.send_idx)[sid]]
+        payload = x_flat[jnp.asarray(rnd.send_idx)[sid]]
         permute = partial(jax.lax.ppermute, axis_name=axis,
                           perm=list(rnd.pairs))
         payload = bf16_wire(permute, payload) if comm_bf16 \
             else permute(payload)
         buf = buf.at[jnp.asarray(rnd.recv_slot)[sid]].set(payload,
                                                           mode="drop")
-    return buf
+    return buf.reshape((plan.r_pad, n) + feat)
 
 
 def exchange_bytes(plan: NeighborExchange, feature_dims: Sequence[int],
@@ -296,22 +416,23 @@ def exchange_bytes(plan: NeighborExchange, feature_dims: Sequence[int],
     """Scheduled wire volume of the p2p transport per ADMM iteration.
 
     ``wire_bytes`` is what the ``ppermute`` rounds actually move: per round,
-    every participating pair transmits the round's padded ``rows_pad`` rows
-    (shards outside the round's partial permutation move nothing).
-    ``p2p_needed_bytes`` counts only the true (unpadded) rows, so
-    ``wire_bytes == p2p_needed_bytes + padding_bytes`` exactly — the
-    invariant ``verify_transport_bytes`` enforces against the mask-derived
+    every participating pair transmits the round's padded ``rows_pad``
+    *node* rows (shards outside the round's partial permutation move
+    nothing).  A whole-block plan wires ``n_pad`` rows per community; a
+    row-exact plan only the true sizes.  ``p2p_needed_bytes`` counts only
+    the true (round-padding-free) rows, so ``wire_bytes ==
+    p2p_needed_bytes + padding_bytes`` exactly — the invariant
+    ``verify_transport_bytes`` enforces against the mask-derived
     ``gather_bytes`` accounting.
     """
     wire_rows = sum(len(r.pairs) * r.rows_pad for r in plan.rounds)
     true_rows = sum(r.true_rows for r in plan.rounds)
-    per_c = plan.n_pad * itemsize
-    wire = sum(wire_rows * c * per_c for c in feature_dims)
-    needed = sum(true_rows * c * per_c for c in feature_dims)
+    wire = sum(wire_rows * c * itemsize for c in feature_dims)
+    needed = sum(true_rows * c * itemsize for c in feature_dims)
     return {"wire_bytes": wire, "p2p_needed_bytes": needed,
             "padding_bytes": wire - needed, "wire_rows": wire_rows,
             "true_rows": true_rows, "num_rounds": plan.num_rounds,
-            "r_pad": plan.r_pad,
+            "r_pad": plan.r_pad, "row_exact": plan.row_exact,
             "lanes_per_shard": plan.lanes_per_shard}
 
 
@@ -327,12 +448,14 @@ def verify_transport_bytes(stats: dict) -> dict:
 
     ``wire_bytes <= needed_bytes`` *including* padding additionally holds
     whenever each shard hosts one community (k=1: every round row is a
-    real row, zero padding) — the benchmark sweeps and CI guards
-    (benchmarks/check_bench.py) run in that regime and assert it strictly.
-    On multi-lane shards round padding may legitimately exceed the mask
-    slack on skewed topologies, so there it is recorded as
-    ``wire_within_needed`` rather than raised — the schedule is still
-    correct and still bounded by the all-gather volume.
+    real row, zero padding) *and* the plan is whole-block — the benchmark
+    sweeps and CI guards (benchmarks/check_bench.py) run in that regime
+    and assert it strictly.  Row-exact plans can carry round padding even
+    at k=1 (messages of different true sizes share a round), so there —
+    as on multi-lane shards — padding overshoot is recorded as
+    ``wire_within_needed`` rather than raised; the schedule is still
+    correct, still bounded by the all-gather volume, and its *true* rows
+    are strictly fewer than the whole-block plan's.
     """
     wire = stats["wire_bytes"]
     if wire > stats["full_bytes"]:
@@ -348,10 +471,12 @@ def verify_transport_bytes(stats: dict) -> dict:
             f"scheduled rows exceed the mask-derived needed volume: "
             f"{stats['p2p_needed_bytes']} > {stats['needed_bytes']}")
     stats["wire_within_needed"] = wire <= stats["needed_bytes"]
-    if stats.get("lanes_per_shard") == 1 and not stats["wire_within_needed"]:
+    if stats.get("lanes_per_shard") == 1 and not stats.get("row_exact") \
+            and not stats["wire_within_needed"]:
         raise ValueError(
-            f"k=1 schedule has padding ({wire} > {stats['needed_bytes']}) "
-            f"— impossible by construction, accounting is broken")
+            f"k=1 whole-block schedule has padding ({wire} > "
+            f"{stats['needed_bytes']}) — impossible by construction, "
+            f"accounting is broken")
     return stats
 
 

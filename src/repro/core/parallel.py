@@ -58,6 +58,20 @@ Adjacency representations (``compressed`` flag):
     max_deg is ~constant in M, so per-shard memory and Z-coupling FLOPs
     stop scaling with the community count — the regime where M can grow
     past what a dense replicated layout fits on device.
+
+Padding (``pad_mode`` flag, default "bucketed"): packed tensors keep the
+fixed (M, n_pad, ...) stride, but under the bucketed scheme every
+community is *logically* padded only to its power-of-two-ish size bucket
+(graph.bucket_pad_sizes) — the ELL kernel's scalar-prefetched row counts
+guard the pad rows out of the DMA+accumulate, the p2p transport wires
+row-exact payloads (a wired community contributes its true rows, not an
+n_pad block), and ``comm_stats`` reports the residual padding as
+``pad_rows``/``pad_bytes``/``pad_flops``/``pad_flop_frac``
+(messages.pad_stats).  "global" restores the historic
+everything-pads-to-the-max behaviour; the iterates are identical either
+way (pad rows are zero throughout), only processed/wired volume changes.
+``adjacency_bf16=True`` (compressed only) additionally stores the ELL
+block plane bf16 — half the resident adjacency bytes, f32 accumulation.
 """
 from __future__ import annotations
 
@@ -96,7 +110,17 @@ class CommunityData:
     ``a_blocks`` (M, M, n_pad, n_pad); compressed mode holds only the ELL
     view ``ell_blocks``/``ell_indices``/``ell_mask`` (graph.BlockCSR,
     O(nnz·n_pad²) bytes) and ``a_blocks`` is None — the shard_map trainer
-    aggregates straight from the sharded ELL rows.
+    aggregates straight from the sharded ELL rows.  With
+    ``adjacency_bf16=True`` (compressed only) the ELL block store is kept
+    bf16 on device — half the resident adjacency bytes — and every
+    aggregation accumulates in f32 (the kernel's scratch / the oracle's
+    explicit upcast).
+
+    ``row_counts``/``nbr_counts`` carry the ragged (bucketed) per-lane and
+    per-neighbour padded row counts the ELL kernel's pad-row guards key
+    off; ``row_mask`` masks packed (M, n_pad) tensors down to true rows
+    (metrics / Lagrangian).  Under the global pad scheme the counts are
+    simply n_pad everywhere.
     """
     a_blocks: "Array | None"   # (M, M, n_pad, n_pad) — dense mode only
     z0: Array            # (M, n_pad, C0)
@@ -105,14 +129,22 @@ class CommunityData:
     test_mask: Array     # (M, n_pad) float32
     neighbor_mask: Array  # (M, M) bool
     denom: Array         # scalar — global labeled-node count
+    row_mask: Array       # (M, n_pad) float32 — 1 = true node row
     # block-compressed Ã (ELL view) — compressed mode only
     ell_blocks: "Array | None" = None    # (M, max_deg, n_pad, n_pad)
     ell_indices: "Array | None" = None   # (M, max_deg) int32
     ell_mask: "Array | None" = None      # (M, max_deg) float32
+    row_counts: "Array | None" = None    # (M,) int32
+    nbr_counts: "Array | None" = None    # (M, max_deg) int32
 
     @property
     def compressed(self) -> bool:
         return self.a_blocks is None
+
+    @property
+    def adjacency_bf16(self) -> bool:
+        return (self.ell_blocks is not None
+                and self.ell_blocks.dtype == jnp.bfloat16)
 
     @property
     def num_parts(self) -> int:
@@ -128,13 +160,21 @@ class CommunityData:
 
 
 def community_data(g: graph.Graph, layout: graph.CommunityLayout,
-                   compressed: bool = False) -> CommunityData:
+                   compressed: bool = False,
+                   adjacency_bf16: bool = False) -> CommunityData:
+    if adjacency_bf16 and not compressed:
+        raise ValueError("adjacency_bf16=True requires compressed=True — "
+                         "only the ELL block store has a bf16 path")
     if compressed:
         csr = layout.compress()
+        rows, nbrs = csr.ell_row_counts()
+        block_dt = jnp.bfloat16 if adjacency_bf16 else jnp.float32
         adj = dict(a_blocks=None,
-                   ell_blocks=jnp.asarray(csr.ell_blocks),
+                   ell_blocks=jnp.asarray(csr.ell_blocks, dtype=block_dt),
                    ell_indices=jnp.asarray(csr.ell_indices),
-                   ell_mask=jnp.asarray(csr.ell_mask))
+                   ell_mask=jnp.asarray(csr.ell_mask),
+                   row_counts=jnp.asarray(rows),
+                   nbr_counts=jnp.asarray(nbrs))
     else:
         adj = dict(a_blocks=jnp.asarray(layout.a_blocks))
     return CommunityData(
@@ -144,6 +184,7 @@ def community_data(g: graph.Graph, layout: graph.CommunityLayout,
         test_mask=jnp.asarray(layout.pack(g.test_mask.astype(np.float32))),
         neighbor_mask=jnp.asarray(layout.neighbor_mask),
         denom=jnp.asarray(float(g.train_mask.sum())),
+        row_mask=jnp.asarray(layout.node_mask.astype(np.float32)),
         **adj,
     )
 
@@ -282,7 +323,9 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
 
     ``adj`` is the shard's adjacency rows — dense mode: a_row (k,M,n,n);
     compressed mode: (ell_rows (k,max_deg,n,n), ell_idx (k,max_deg),
-    ell_msk (k,max_deg)).  ``plan`` selects the transport: None means
+    ell_msk (k,max_deg), ell_rcnt (k,), ell_ncnt (k,max_deg)) with the
+    ragged row counts feeding the ELL kernel's pad-row guards.  ``plan``
+    selects the transport: None means
     all-gather (ell_idx holds *global* community ids into the gathered
     (M,n,C) payload); a NeighborExchange means neighbour-only ppermute
     rounds (ell_idx is pre-remapped to slots of the (r_pad,n,C) receive
@@ -297,20 +340,23 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     shard_nbr = jnp.max(nbrf, axis=0)            # (M,)
 
     if compressed:
-        ell_rows, ell_idx, ell_msk = adj
+        ell_rows, ell_idx, ell_msk, ell_rcnt, ell_ncnt = adj
         ell_f = ell_msk.astype(jnp.float32)      # (k, max_deg)
         if use_kernel:
             from repro.kernels import ops as kops
 
             def rowagg(zh):
                 # scalar-prefetched indices steer the Z-block DMA; padding
-                # slots skip via @pl.when: work ∝ nnz blocks
+                # slots skip via @pl.when and the row-count guards drop pad
+                # rows of ragged (bucketed) layouts: work ∝ true block rows
                 return kops.community_spmm_ell(ell_rows, ell_idx, ell_msk,
-                                               zh)
+                                               zh, ell_rcnt, ell_ncnt)
         else:
             def rowagg(zh):              # Σ_{d} Ã[m,d] Z[idx[m,d]] per lane
                 zg = zh[ell_idx] * ell_f[..., None, None]
-                return jnp.einsum("kdip,kdpc->kic", ell_rows, zg)
+                return jnp.einsum("kdip,kdpc->kic",
+                                  ell_rows.astype(jnp.float32),
+                                  zg.astype(jnp.float32))
     elif use_kernel:
         a_row = adj
         from repro.kernels import ops as kops
@@ -401,7 +447,8 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
             # O(max_deg·n_pad²·C) per lane instead of the dense O(M·…).
             def pre_nbr(z, q_all=q_all, z_ref=z_ref, w_next=w_next):
                 delta = (z - z_ref) @ w_next                 # (k, n, C)
-                own = jnp.einsum("kdnp,knc->kdpc", ell_rows, delta)
+                own = jnp.einsum("kdnp,knc->kdpc",
+                                 ell_rows.astype(jnp.float32), delta)
                 return q_all[ell_idx] + own                  # (k, D, n, C)
 
             wt = ell_f[..., None, None]                      # (k, D, 1, 1)
@@ -476,7 +523,9 @@ class ParallelADMMTrainer:
                  use_kernel: bool = False, comm_bf16: bool = False,
                  compressed: bool = False, part: np.ndarray | None = None,
                  transport: str | None = None,
-                 partitioner: str | None = None):
+                 partitioner: str | None = None,
+                 pad_mode: str = "bucketed",
+                 adjacency_bf16: bool = False):
         self.cfg, self.admm, self.graph = cfg, admm, g
         self.compressed = compressed
         if transport is None:
@@ -488,6 +537,12 @@ class ParallelADMMTrainer:
             raise ValueError("transport='p2p' requires compressed=True — "
                              "the dense Z-coupling reads all M payload rows")
         self.transport = transport
+        if pad_mode not in ("global", "bucketed"):
+            raise ValueError(f"unknown pad_mode {pad_mode!r}; "
+                             f"expected 'global' or 'bucketed'")
+        if adjacency_bf16 and not compressed:
+            raise ValueError("adjacency_bf16=True requires compressed=True")
+        self.pad_mode = pad_mode
         if part is None:
             partitioner = partitioner or "bfs_kl"
             part = graph.partition_graph(g.num_nodes, g.edges, num_parts,
@@ -501,8 +556,10 @@ class ParallelADMMTrainer:
         self.partition_stats = graph.partition_quality(
             g.num_nodes, g.edges, part, num_parts)
         self.layout = graph.build_community_layout(g.num_nodes, g.edges, part,
-                                                   compressed=compressed)
-        self.data = community_data(g, self.layout, compressed=compressed)
+                                                   compressed=compressed,
+                                                   pad_mode=pad_mode)
+        self.data = community_data(g, self.layout, compressed=compressed,
+                                   adjacency_bf16=adjacency_bf16)
         m = self.data.num_parts
 
         if mesh is None:
@@ -528,8 +585,12 @@ class ParallelADMMTrainer:
         self._plan = None
         ell_idx_dev = self.data.ell_indices
         if self.transport == "p2p":
+            # bucketed layouts wire row-exact payloads: only each wired
+            # community's true rows ever cross the wire; the global scheme
+            # keeps the historic whole-n_pad-block messages
             self._plan = messages.build_neighbor_exchange(
-                self.layout.neighbor_mask, n_shards, self.layout.n_pad)
+                self.layout.neighbor_mask, n_shards, self.layout.n_pad,
+                sizes=self.layout.sizes if pad_mode == "bucketed" else None)
             if n_shards == 1:
                 # one shard hosts every community: nothing ever crosses the
                 # wire, the transports are the same program (the all-gather
@@ -552,10 +613,12 @@ class ParallelADMMTrainer:
                        compressed, body_plan)
         if compressed:
             # each shard carries only its lanes' ELL rows — no dense
-            # (M, M, n_pad, n_pad) tensor exists on device
+            # (M, M, n_pad, n_pad) tensor exists on device — plus its
+            # lanes' ragged row counts for the kernel pad-row guards
             adj_data = (self.data.ell_blocks, ell_idx_dev,
-                        self.data.ell_mask)
-            adj_spec = (sharded, sharded, sharded)
+                        self.data.ell_mask, self.data.row_counts,
+                        self.data.nbr_counts)
+            adj_spec = (sharded, sharded, sharded, sharded, sharded)
         else:
             adj_data = self.data.a_blocks
             adj_spec = sharded
@@ -593,6 +656,36 @@ class ParallelADMMTrainer:
             self.layout.neighbor_mask, self.layout.n_pad, gathered_cs,
             itemsize=2 if comm_bf16 else 4)
         self.comm_stats["transport"] = self.transport
+        # residual-padding accounting: how many payload rows / aggregation
+        # FLOPs this trainer spends beyond the true community sizes.  The
+        # bucketed row_counts only shrink what a consumer actually
+        # exploits, so each axis is gated on its consumer being engaged —
+        # pad FLOPs drop only on the guarded-kernel path (use_kernel:
+        # tiles past the row counts skip the DMA+accumulate on TPU; the
+        # CPU/interpret fallbacks emulate the same masked semantics, so
+        # off-TPU the number is the kernel-path bound rather than a
+        # measured skip, while the default einsum body processes every
+        # n_pad row and claims nothing), pad wire rows only under the
+        # row-exact p2p transport (an all-gather moves full-pad payloads
+        # regardless of layout) — the recorded numbers describe the
+        # configured program, not the layout's potential
+        self.comm_stats["pad_mode"] = pad_mode
+        kernel_ragged = compressed and use_kernel
+        wire_ragged = self.transport == "p2p"
+        item = 2 if comm_bf16 else 4
+        ps_flops = messages.pad_stats(
+            self.layout.neighbor_mask, self.layout.sizes,
+            self.layout.row_counts if kernel_ragged else None,
+            self.layout.n_pad, gathered_cs, itemsize=item)
+        ps_wire = messages.pad_stats(
+            self.layout.neighbor_mask, self.layout.sizes,
+            self.layout.row_counts if wire_ragged else None,
+            self.layout.n_pad, gathered_cs, itemsize=item)
+        self.comm_stats.update(ps_wire)
+        self.comm_stats.update({k: ps_flops[k] for k in
+                                ("pad_flops", "agg_flops", "pad_flop_frac")})
+        self.comm_stats["pad_guards"] = {"kernel": kernel_ragged,
+                                         "wire": wire_ragged}
         # the partition sets the communication: its edge cut is the p2p
         # wire volume's block count, its max_deg the ELL fan-in
         self.comm_stats["partitioner"] = self.partitioner
@@ -608,8 +701,10 @@ class ParallelADMMTrainer:
             # an all-gather moves every row to every shard
             self.comm_stats["wire_bytes"] = self.comm_stats["full_bytes"]
         # device-resident adjacency accounting for this trainer's mode
+        # (itemsize-aware: the bf16 ELL block store halves the block term)
         self.comm_stats["adjacency"] = messages.adjacency_bytes(
-            self.layout.neighbor_mask, self.layout.n_pad)
+            self.layout.neighbor_mask, self.layout.n_pad,
+            itemsize=2 if adjacency_bf16 else 4)
         self.comm_stats["adjacency"]["resident_bytes"] = \
             int(self.data.adjacency_nbytes)
 
@@ -619,10 +714,11 @@ class ParallelADMMTrainer:
         if compressed:
             ell = (self.data.ell_blocks, self.data.ell_indices,
                    self.data.ell_mask)
+            counts = (self.data.row_counts, self.data.nbr_counts)
 
             def agg_full(z_pack):
                 from repro.kernels import ops as kops
-                return kops.community_spmm_ell(*ell, z_pack)
+                return kops.community_spmm_ell(*ell, z_pack, *counts)
         else:
             a_blocks = self.data.a_blocks
             nbr_f = self.data.neighbor_mask.astype(jnp.float32)
@@ -643,11 +739,14 @@ class ParallelADMMTrainer:
                     z = f_act(z)
             return z
 
+        row_mask = data.row_mask[..., None]       # (M, n_pad, 1) true rows
+
         @jax.jit
         def metrics(state: ParallelState):
             logits = forward_packed(state.weights)
             z_pen = state.zs[-2] if cfg.num_layers >= 2 else data.z0
-            res = state.zs[-1] - agg_full(z_pen) @ state.weights[-1]
+            res = (state.zs[-1] - agg_full(z_pen) @ state.weights[-1]) \
+                * row_mask
             return (gcn.accuracy(logits, data.labels, data.train_mask),
                     gcn.accuracy(logits, data.labels, data.test_mask),
                     jnp.linalg.norm(res))
@@ -656,9 +755,13 @@ class ParallelADMMTrainer:
 
         @jax.jit
         def lagrangian(state: ParallelState):
-            """ℒ_ρ(W, Z, U) — eq. (1) on the packed iterates; padded slots
-            carry zero adjacency/mask so this equals the global
-            subproblems.lagrangian_value on the unpacked state."""
+            """ℒ_ρ(W, Z, U) — eq. (1) on the packed iterates.  Every
+            residual is masked down to the true community rows
+            (``row_mask``): pad slots carry zero adjacency/labels so the
+            mask changes no value, it pins the invariant that padding —
+            global or bucketed — never leaks into the objective, and the
+            result equals the global subproblems.lagrangian_value on the
+            unpacked state."""
             ws, zs, u = state.weights, state.zs, state.u
             logp = jax.nn.log_softmax(zs[-1], axis=-1)
             nll = -jnp.take_along_axis(logp, data.labels[..., None],
@@ -666,11 +769,12 @@ class ParallelADMMTrainer:
             val = jnp.sum(nll * data.train_mask) / data.denom
             z_prev = data.z0
             for l in range(cfg.num_layers - 1):
-                r = zs[l] - f_act(agg_full(z_prev) @ ws[l])
+                r = (zs[l] - f_act(agg_full(z_prev) @ ws[l])) * row_mask
                 val += 0.5 * admm.nu * jnp.vdot(r, r).real
                 z_prev = zs[l]
-            r = zs[-1] - agg_full(z_prev) @ ws[-1]
-            val += jnp.vdot(u, r).real + 0.5 * admm.rho * jnp.vdot(r, r).real
+            r = (zs[-1] - agg_full(z_prev) @ ws[-1]) * row_mask
+            val += jnp.vdot(u * row_mask, r).real \
+                + 0.5 * admm.rho * jnp.vdot(r, r).real
             return val
 
         self._lagrangian = lagrangian

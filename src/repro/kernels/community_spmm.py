@@ -101,41 +101,70 @@ def _vmem_scratch(shape):
 # BlockSpec index_map can steer the Z DMA before the body runs, and padding
 # slots (ell_mask == 0) skip the MXU work with ``@pl.when`` — the same
 # predication trick as the dense kernel's absent-block skip.
+#
+# Ragged (size-aware) padding: two more scalar-prefetched planes,
+# ``row_counts`` (k,) and ``nbr_counts`` (k, max_deg), carry each lane's
+# true padded row count and each stored neighbour's.  The contraction axis
+# is tiled (grid axis 4, ``tile_p``), and a tile is accumulated only when
+# (a) the block is real, (b) the output row tile starts below the lane's
+# row count and (c) the contraction tile starts below the neighbour's row
+# count — pad rows drop out of the DMA+accumulate at tile granularity, so
+# work tracks the bucketed community sizes instead of the global n_pad.
+# With counts pinned at n_pad (the default) every guard is trivially live
+# and the kernel is the historic global-pad program.
 # ---------------------------------------------------------------------------
 
 
-def _spmm_ell_kernel(idx_ref, msk_ref, a_ref, z_ref, o_ref, acc_scr):
+def _spmm_ell_kernel(idx_ref, msk_ref, rows_ref, nbr_ref, a_ref, z_ref,
+                     o_ref, acc_scr, *, tile_n: int, tile_p: int):
     m = pl.program_id(0)
+    i = pl.program_id(1)
     d = pl.program_id(3)
+    p = pl.program_id(4)
     n_d = pl.num_programs(3)
+    n_p = pl.num_programs(4)
 
-    @pl.when(d == 0)
+    @pl.when((d == 0) & (p == 0))
     def _init():
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    @pl.when(msk_ref[m, d] != 0)
+    live = ((msk_ref[m, d] != 0)
+            & (i * tile_n < rows_ref[m])         # output rows are real
+            & (p * tile_p < nbr_ref[m, d]))      # neighbour rows are real
+
+    @pl.when(live)
     def _accum():
-        a = a_ref[...]                       # (tile_n, n_pad)
-        z = z_ref[...]                       # (n_pad, tile_c)
+        a = a_ref[...].astype(jnp.float32)       # (tile_n, tile_p)
+        z = z_ref[...].astype(jnp.float32)       # (tile_p, tile_c)
         acc_scr[...] += jnp.dot(a, z, preferred_element_type=jnp.float32)
 
-    @pl.when(d == n_d - 1)
+    @pl.when((d == n_d - 1) & (p == n_p - 1))
     def _write():
         o_ref[...] = acc_scr[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_n", "tile_c", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_c", "tile_p",
+                                             "interpret"))
 def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
                        ell_mask: jax.Array, z_all: jax.Array,
+                       row_counts: jax.Array | None = None,
+                       nbr_counts: jax.Array | None = None,
                        *, tile_n: int = DEFAULT_TILE_N,
                        tile_c: int = DEFAULT_TILE_C,
+                       tile_p: int | None = None,
                        interpret: bool = False) -> jax.Array:
-    """Σ_d mask[m,d] · blocks[m,d] @ z_all[idx[m,d]] — O(nnz·n_pad²·C).
+    """Σ_d mask[m,d] · blocks[m,d] @ z_all[idx[m,d]] — O(nnz·n_pad²·C),
+    and with ragged row counts O(Σ bucket_m · bucket_d · C) only.
 
-    ell_blocks:  (k, max_deg, n_pad, n_pad) — a shard's ELL rows
+    ell_blocks:  (k, max_deg, n_pad, n_pad) — a shard's ELL rows (f32 or
+                 bf16; accumulation always f32)
     ell_indices: (k, max_deg) int32 global community ids into z_all
     ell_mask:    (k, max_deg) — nonzero = real block, 0 = padding slot
     z_all:       (M, n_pad, C) gathered community features
+    row_counts:  optional (k,) int32 — lane m's padded rows; output row
+                 tiles past it are skipped (written as zero)
+    nbr_counts:  optional (k, max_deg) int32 — rows of each stored
+                 neighbour; contraction tiles past it are skipped
     returns      (k, n_pad, C)
     """
     from jax.experimental.pallas import tpu as pltpu
@@ -144,29 +173,41 @@ def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
     c = z_all.shape[-1]
     tile_n = min(tile_n, n_pad)
     tile_c = min(tile_c, c)
+    tile_p = tile_n if tile_p is None else min(tile_p, n_pad)
     while n_pad % tile_n:
         tile_n //= 2
     while c % tile_c:
         tile_c //= 2
+    while n_pad % tile_p:
+        tile_p //= 2
 
-    grid = (k, n_pad // tile_n, c // tile_c, max_deg)
+    if row_counts is None:
+        row_counts = jnp.full((k,), n_pad, jnp.int32)
+    if nbr_counts is None:
+        nbr_counts = jnp.full((k, max_deg), n_pad, jnp.int32)
+
+    grid = (k, n_pad // tile_n, c // tile_c, max_deg, n_pad // tile_p)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,               # ell_indices, ell_mask (SMEM)
+        num_scalar_prefetch=4,     # ell_indices, ell_mask, rows, nbrs (SMEM)
         grid=grid,
         in_specs=[
-            pl.BlockSpec((None, None, tile_n, n_pad),
-                         lambda m, i, j, d, idx, msk: (m, d, i, 0)),
-            pl.BlockSpec((None, n_pad, tile_c),
-                         lambda m, i, j, d, idx, msk: (idx[m, d], 0, j)),
+            pl.BlockSpec((None, None, tile_n, tile_p),
+                         lambda m, i, j, d, p, idx, msk, rows, nbr:
+                         (m, d, i, p)),
+            pl.BlockSpec((None, tile_p, tile_c),
+                         lambda m, i, j, d, p, idx, msk, rows, nbr:
+                         (idx[m, d], p, j)),
         ],
         out_specs=pl.BlockSpec((None, tile_n, tile_c),
-                               lambda m, i, j, d, idx, msk: (m, i, j)),
+                               lambda m, i, j, d, p, idx, msk, rows, nbr:
+                               (m, i, j)),
         scratch_shapes=[pltpu.VMEM((tile_n, tile_c), jnp.float32)],
     )
     return pl.pallas_call(
-        _spmm_ell_kernel,
+        functools.partial(_spmm_ell_kernel, tile_n=tile_n, tile_p=tile_p),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((k, n_pad, c), z_all.dtype),
         interpret=interpret,
     )(ell_indices.astype(jnp.int32), ell_mask.astype(jnp.int32),
+      row_counts.astype(jnp.int32), nbr_counts.astype(jnp.int32),
       ell_blocks, z_all)

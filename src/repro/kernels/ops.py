@@ -55,7 +55,9 @@ def community_spmm(a_row: jax.Array, z_all: jax.Array,
 
 
 def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
-                       ell_mask: jax.Array, z_all: jax.Array) -> jax.Array:
+                       ell_mask: jax.Array, z_all: jax.Array,
+                       row_counts: jax.Array | None = None,
+                       nbr_counts: jax.Array | None = None) -> jax.Array:
     """Block-compressed aggregation: Σ_{d} Ã[m,d] Z[idx[m,d]] over the ELL
     view (graph.BlockCSR) — FLOPs and memory are O(nnz·n_pad²·C), not M².
 
@@ -65,19 +67,27 @@ def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
     interpret-mode kernel body via ``repro_force_interpret``.
 
     ell_blocks:  (k, max_deg, n_pad, n_pad) — a shard's ELL rows (k = M on
-                 the full layout, k = M/n_shards inside shard_map)
+                 the full layout, k = M/n_shards inside shard_map); f32 or
+                 bf16 (CommunityData(adjacency_bf16=True)) — accumulation
+                 is f32 either way
     ell_indices: (k, max_deg) int32 — global community ids into z_all
     ell_mask:    (k, max_deg) — 1 for real blocks, 0 for padding
     z_all:       (M, n_pad, C)
+    row_counts:  optional (k,) — ragged layouts: lane's padded row count;
+                 tiles past it skip the DMA+accumulate (graph.BlockCSR.
+                 ell_row_counts)
+    nbr_counts:  optional (k, max_deg) — rows each stored neighbour block
+                 contributes
     returns      (k, n_pad, C)
     """
     if _on_tpu():
-        return _spmm_ell_kernel(ell_blocks, ell_indices, ell_mask, z_all)
+        return _spmm_ell_kernel(ell_blocks, ell_indices, ell_mask, z_all,
+                                row_counts, nbr_counts)
     if _FORCE_INTERPRET:
         return _spmm_ell_kernel(ell_blocks, ell_indices, ell_mask, z_all,
-                                interpret=True)
+                                row_counts, nbr_counts, interpret=True)
     return ref.community_spmm_ell_einsum(ell_blocks, ell_indices, ell_mask,
-                                         z_all)
+                                         z_all, row_counts, nbr_counts)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -13,26 +13,53 @@ def community_spmm_ref(a_row: jax.Array, z_all: jax.Array,
 
 
 def community_spmm_ell_einsum(ell_blocks: jax.Array, ell_indices: jax.Array,
-                              ell_mask: jax.Array,
-                              z_all: jax.Array) -> jax.Array:
+                              ell_mask: jax.Array, z_all: jax.Array,
+                              row_counts: jax.Array | None = None,
+                              nbr_counts: jax.Array | None = None
+                              ) -> jax.Array:
     """Gather-einsum form of the ELL aggregation — the CPU dispatch path and
-    the vectorized allclose target for the Pallas ELL kernel."""
+    the vectorized allclose target for the Pallas ELL kernel.
+
+    ``row_counts`` (k,) / ``nbr_counts`` (k, max_deg) reproduce the ragged
+    kernel's pad-row guards: output rows ≥ row_counts[m] and gathered Z
+    rows ≥ nbr_counts[m, d] contribute nothing (they are zero in any real
+    layout, so counts change no values — the guards are what lets the
+    kernel *skip* the work).  Blocks may be bf16; accumulation is f32.
+    """
     z_g = z_all[ell_indices] * ell_mask[..., None, None].astype(z_all.dtype)
-    return jnp.einsum("mdip,mdpc->mic", ell_blocks, z_g)
+    if nbr_counts is not None:
+        lane = jnp.arange(z_all.shape[-2])
+        z_g = z_g * (lane[None, None, :, None]
+                     < nbr_counts[..., None, None]).astype(z_g.dtype)
+    out = jnp.einsum("mdip,mdpc->mic",
+                     ell_blocks.astype(jnp.float32),
+                     z_g.astype(jnp.float32)).astype(z_all.dtype)
+    if row_counts is not None:
+        lane = jnp.arange(out.shape[-2])
+        out = out * (lane[None, :, None]
+                     < row_counts[:, None, None]).astype(out.dtype)
+    return out
 
 
 def community_spmm_ell_ref(ell_blocks: jax.Array, ell_indices: jax.Array,
-                           ell_mask: jax.Array, z_all: jax.Array) -> jax.Array:
+                           ell_mask: jax.Array, z_all: jax.Array,
+                           row_counts: jax.Array | None = None,
+                           nbr_counts: jax.Array | None = None) -> jax.Array:
     """Loop oracle for the block-compressed (ELL) aggregation."""
     m, max_deg = ell_indices.shape
-    out = jnp.zeros((m,) + (ell_blocks.shape[2], z_all.shape[-1]),
-                    z_all.dtype)
+    n_pad = ell_blocks.shape[2]
+    out = jnp.zeros((m,) + (n_pad, z_all.shape[-1]), z_all.dtype)
+    lane = jnp.arange(n_pad)
     for row in range(m):
-        acc = jnp.zeros((ell_blocks.shape[2], z_all.shape[-1]), jnp.float32)
+        acc = jnp.zeros((n_pad, z_all.shape[-1]), jnp.float32)
         for d in range(max_deg):
+            z = z_all[ell_indices[row, d]].astype(jnp.float32)
+            if nbr_counts is not None:
+                z = z * (lane[:, None] < nbr_counts[row, d])
             acc += ell_mask[row, d] * (
-                ell_blocks[row, d].astype(jnp.float32)
-                @ z_all[ell_indices[row, d]].astype(jnp.float32))
+                ell_blocks[row, d].astype(jnp.float32) @ z)
+        if row_counts is not None:
+            acc = acc * (lane[:, None] < row_counts[row])
         out = out.at[row].set(acc.astype(z_all.dtype))
     return out
 

@@ -182,49 +182,104 @@ def _initial_partition(xadj: Array, adjncy: Array, adjwgt: Array,
 def _refine(xadj: Array, adjncy: Array, adjwgt: Array, vwgt: Array,
             part: Array, num_parts: int, cap_w: float,
             rng: np.random.Generator, passes: int) -> Array:
-    """Weighted boundary Kernighan–Lin: per pass, score every boundary
-    vertex's best positive-gain move (edge weight to target minus edge
-    weight kept), take moves in descending-gain order (integer gains —
-    an argsort stand-in for the KL/FM gain-bucket queue), re-validating
-    gain and the weight cap at apply time."""
+    """Weighted boundary refinement with a real FM gain-bucket queue.
+
+    The argsort stand-in this replaces re-scored and re-sorted every
+    positive-gain candidate each pass and applied the snapshot order
+    against drifted gains.  This is the classic Fiduccia–Mattheyses
+    discipline instead: per pass every *boundary* vertex files its best
+    move into ``buckets[gain]`` (integer edge-weight gains); moves pop
+    from the current maximum bucket with lazy invalidation (``filed[u]``
+    remembers the gain a vertex was filed under — stale entries are
+    skipped or re-filed at their current gain) and the weight cap is
+    re-validated at apply time.  Crucially, non-positive-gain moves are
+    taken too (each vertex at most once per pass — ``locked``): the pass
+    hill-climbs through plateaus and shallow minima, records the running
+    cut delta, and afterwards ROLLS BACK to the best prefix of the move
+    sequence.  An applied move re-files only the moved vertex's
+    neighbours — O(moves·deg) bucket maintenance, and strictly stronger
+    search than the positive-gain-only argsort passes (a pass can never
+    end worse than it started; it can escape optima the old code was
+    stuck in).
+    """
     n = xadj.shape[0] - 1
     sizes = np.bincount(part, weights=vwgt, minlength=num_parts
                         ).astype(np.int64)
 
     def best_move(u: int) -> tuple[int, int]:
+        """Highest-gain target for u (may be ≤ 0); -1 if u is interior."""
         lo, hi = xadj[u], xadj[u + 1]
         if lo == hi:
             return -1, 0
-        conn = np.bincount(part[adjncy[lo:hi]], weights=adjwgt[lo:hi],
-                           minlength=num_parts)
+        nbr_parts = part[adjncy[lo:hi]]
         cur = int(part[u])
+        if (nbr_parts == cur).all():
+            return -1, 0                          # interior vertex
+        conn = np.bincount(nbr_parts, weights=adjwgt[lo:hi],
+                           minlength=num_parts)
         gains = conn - conn[cur]
-        gains[cur] = 0
+        gains[cur] = np.iinfo(np.int64).min
         tgt = int(np.argmax(gains))
-        return (tgt, int(gains[tgt])) if gains[tgt] > 0 else (-1, 0)
+        return tgt, int(gains[tgt])
 
     for _ in range(passes):
-        cand, gain = [], []
-        for u in range(n):
+        buckets: dict[int, collections.deque] = {}
+        filed: dict[int, int] = {}                # vertex -> gain filed under
+        locked = np.zeros(n, dtype=bool)
+
+        def push(u: int) -> None:
             tgt, g = best_move(u)
             if tgt >= 0:
-                cand.append(u)
-                gain.append(g)
-        if not cand:
-            break
-        moved = 0
-        for i in np.argsort(-np.asarray(gain), kind="stable"):
-            u = int(cand[i])
-            tgt, g = best_move(u)            # re-check: earlier moves shift it
+                buckets.setdefault(g, collections.deque()).append(u)
+                filed[u] = g
+            else:
+                filed.pop(u, None)
+
+        for u in range(n):
+            push(u)
+        history: list[tuple[int, int, int]] = []  # (u, from, gain)
+        cum = best_cum = 0
+        best_len = 0
+        while buckets:
+            g = max(buckets)
+            queue = buckets[g]
+            if not queue:
+                del buckets[g]
+                continue
+            u = int(queue.popleft())
+            if locked[u] or filed.get(u) != g:
+                continue                          # stale entry
+            tgt, g_now = best_move(u)
+            if tgt < 0:
+                filed.pop(u, None)
+                continue
+            if g_now != g:
+                push(u)                           # re-file at current gain
+                continue
             cur = int(part[u])
-            if tgt < 0 or sizes[tgt] + vwgt[u] > cap_w \
-                    or sizes[cur] - vwgt[u] <= 0:
+            if sizes[tgt] + vwgt[u] > cap_w or sizes[cur] - vwgt[u] <= 0:
+                filed.pop(u, None)
                 continue
             part[u] = tgt
             sizes[cur] -= vwgt[u]
             sizes[tgt] += vwgt[u]
-            moved += 1
-        if moved == 0:
+            locked[u] = True
+            filed.pop(u, None)
+            history.append((u, cur, g))
+            cum += g
+            if cum > best_cum:
+                best_cum, best_len = cum, len(history)
+            for v in adjncy[xadj[u]:xadj[u + 1]]:
+                if not locked[v]:
+                    push(int(v))
+        # roll back to the best prefix of the move sequence (classic FM):
+        # the pass keeps only the moves up to the maximum cumulative gain
+        for u, src, _ in reversed(history[best_len:]):
+            tgt = int(part[u])
+            part[u] = src
+            sizes[tgt] -= vwgt[u]
+            sizes[src] += vwgt[u]
+        if best_cum <= 0:
             break
     return part
 

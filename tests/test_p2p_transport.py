@@ -18,29 +18,52 @@ from repro.core import graph, messages
 from repro.sharding.partition import ring_round_coloring
 
 
-@pytest.fixture(scope="module", params=[2, 4])
+@pytest.fixture(scope="module", params=[(2, False), (4, False),
+                                        (2, True), (4, True)])
 def plan_case(request):
-    n_shards = request.param
+    """Whole-block plans on the uniform graph and row-exact plans on a
+    size-skewed bucketed layout — the schedule tests hold for both."""
+    n_shards, row_exact = request.param
     g, part = graph.synthetic_powerlaw_communities(
-        num_parts=8, nodes_per_part=12, attach=2, seed=4, feat_dim=8)
-    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
-                                          compressed=True)
-    plan = messages.build_neighbor_exchange(layout.neighbor_mask, n_shards,
-                                            layout.n_pad)
+        num_parts=8, nodes_per_part=12, attach=2, seed=4, feat_dim=8,
+        size_skew=0.8 if row_exact else 0.0)
+    layout = graph.build_community_layout(
+        g.num_nodes, g.edges, part, compressed=True,
+        pad_mode="bucketed" if row_exact else "global")
+    plan = messages.build_neighbor_exchange(
+        layout.neighbor_mask, n_shards, layout.n_pad,
+        sizes=layout.sizes if row_exact else None)
+    assert plan.row_exact == row_exact
     return layout, plan, n_shards
 
 
 def _deliveries(plan):
-    """(dst_shard, global_id) pairs the schedule actually transmits."""
-    k = plan.lanes_per_shard
-    out = []
+    """(dst_shard, global_id, slot) triples the schedule transmits.
+
+    Rows travel at node granularity: for every delivered community the
+    helper additionally asserts that exactly its wired rows (true size on
+    row-exact plans, all n_pad otherwise) arrive, each at the receive-
+    buffer row its sender packed it for."""
+    k, n = plan.lanes_per_shard, plan.n_pad
+    rows_seen: dict[tuple, set] = {}
     for rnd in plan.rounds:
         for src, dst in rnd.pairs:
             for t in range(rnd.rows_pad):
-                slot = int(rnd.recv_slot[dst, t])
-                if slot < plan.r_pad:      # real row, not round padding
-                    gid = src * k + int(rnd.send_idx[src, t])
-                    out.append((dst, gid, slot))
+                flat = int(rnd.recv_slot[dst, t])
+                if flat >= plan.r_pad * n:   # round padding, dropped
+                    continue
+                slot, row = divmod(flat, n)
+                lane, srow = divmod(int(rnd.send_idx[src, t]), n)
+                assert srow == row, "send row misaligned with receive row"
+                key = (dst, src * k + lane, slot)
+                dup = rows_seen.setdefault(key, set())
+                assert row not in dup, f"row {row} delivered twice: {key}"
+                dup.add(row)
+    out = []
+    for (dst, gid, slot), rows in rows_seen.items():
+        assert rows == set(range(plan.sizes[gid])), \
+            f"community {gid} wired rows {sorted(rows)} != its true size"
+        out.append((dst, gid, slot))
     return out
 
 
@@ -112,8 +135,19 @@ def test_wire_byte_invariant(plan_case):
     assert stats["wire_bytes"] <= stats["full_bytes"]
     assert stats["wire_bytes"] == (stats["p2p_needed_bytes"]
                                    + stats["padding_bytes"])
-    # padding included, the schedule stays within the mask-derived need
-    assert stats["wire_bytes"] <= stats["needed_bytes"]
+    # the scheduled true rows never exceed the mask-derived need, and the
+    # padding-included bound is recorded (hard only for whole-block plans)
+    assert stats["p2p_needed_bytes"] <= stats["needed_bytes"]
+    assert stats["wire_within_needed"] == \
+        (stats["wire_bytes"] <= stats["needed_bytes"])
+    if not plan.row_exact:
+        assert stats["wire_within_needed"]
+    else:
+        # row-exact: strictly fewer true rows than the whole-block plan
+        whole = messages.exchange_bytes(messages.build_neighbor_exchange(
+            layout.neighbor_mask, n_shards, layout.n_pad), dims)
+        assert stats["p2p_needed_bytes"] < whole["p2p_needed_bytes"]
+        assert stats["wire_bytes"] < whole["wire_bytes"]
     assert stats["wire_bytes"] > 0              # cross-shard edges exist
     # the whole point: the schedule moves less than the all-gather
     assert stats["wire_bytes"] < stats["full_bytes"]

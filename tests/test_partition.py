@@ -119,10 +119,15 @@ GOLDEN_QUALITY = {
     # (graph, M): {method: (edge_cut, max_deg)} — exact values; a changed
     # cut means the partitioner changed behaviour, which must be a
     # deliberate decision (re-record the goldens), never silent drift.
-    ("powerlaw32", 32): {"bfs_kl": (1224, 24), "multilevel": (591, 15)},
-    ("powerlaw8", 8): {"bfs_kl": (179, 6), "multilevel": (116, 6)},
-    ("sbm_photo_mini", 3): {"bfs_kl": (6968, 3), "multilevel": (4149, 3)},
-    ("sbm_photo_mini", 4): {"bfs_kl": (6035, 4), "multilevel": (4085, 4)},
+    # Re-pinned when the FM gain-bucket refinement (hill-climb + best-
+    # prefix rollback) replaced the positive-gain argsort passes: every
+    # cut improved — powerlaw32 591→244 (the planted cut exactly),
+    # powerlaw8 116→96, photo_mini M=3 4149→3836, M=4 4085→3878 — and no
+    # max_deg got worse.  Re-pin again ONLY on improvement.
+    ("powerlaw32", 32): {"bfs_kl": (1224, 24), "multilevel": (244, 13)},
+    ("powerlaw8", 8): {"bfs_kl": (179, 6), "multilevel": (96, 5)},
+    ("sbm_photo_mini", 3): {"bfs_kl": (6968, 3), "multilevel": (3836, 3)},
+    ("sbm_photo_mini", 4): {"bfs_kl": (6035, 4), "multilevel": (3878, 4)},
 }
 
 

@@ -157,6 +157,40 @@ def test_sparse_layout_roundtrip(n, extra, m, c, seed):
     np.testing.assert_allclose(layout.unpack(z), x, rtol=0, atol=0)
 
 
+@given(sizes=st.lists(st.integers(0, 40), min_size=2, max_size=8),
+       extra=st.integers(0, 60), c=st.integers(1, 5),
+       seed=st.integers(0, 5),
+       pad_mode=st.sampled_from(["global", "bucketed"]))
+@settings(**SETTINGS)
+def test_ragged_blockify_roundtrip(sizes, extra, c, seed, pad_mode):
+    """Ragged blockify/unblockify round-trips node arrays for ANY community
+    size distribution — skewed, empty and singleton communities included —
+    under both pad schemes, with bucketed row counts always covering the
+    true sizes within the packed envelope."""
+    if sum(sizes) < 2:
+        sizes = sizes + [2]
+    m = len(sizes)
+    rng = np.random.default_rng(seed)
+    part = np.repeat(np.arange(m), sizes).astype(np.int32)
+    rng.shuffle(part)                       # arbitrary node order
+    n = len(part)
+    edges = _random_graph(n, extra, seed).astype(np.int32)
+    layout = graph.build_community_layout(n, edges, part, num_parts=m,
+                                          pad_mode=pad_mode)
+    assert layout.num_parts == m            # empty communities kept
+    np.testing.assert_array_equal(layout.sizes,
+                                  np.bincount(part, minlength=m))
+    counts = layout.eff_row_counts()
+    assert (counts >= layout.sizes).all()
+    assert (counts <= layout.n_pad).all()
+    assert int(counts.sum()) <= m * layout.n_pad
+    x = rng.normal(size=(n, c)).astype(np.float32)
+    np.testing.assert_array_equal(layout.unblockify(layout.blockify(x)), x)
+    np.testing.assert_array_equal(layout.unpack(layout.pack(x)), x)
+    # ragged rows save exactly the bucket-vs-global pad delta
+    assert layout.blockify(x).shape[0] == int(counts.sum())
+
+
 @given(seed=st.integers(0, 50))
 @settings(**SETTINGS)
 def test_backtracking_never_increases_objective(seed):
