@@ -61,7 +61,7 @@ def main():
     params = model.init(jax.random.key(0))
     opt_state = model.init_optimizer().init(params)
     step = jax.jit(model.train_step)
-    for i in range(args.iters):
+    for _ in range(args.iters):
         params, opt_state, m = step(params, opt_state, batch)
     print(f"[adam] {args.iters} steps -> ce {float(m['ce']):.4f}")
 

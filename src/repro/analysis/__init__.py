@@ -1,0 +1,23 @@
+"""repro.analysis — a jaxpr/HLO invariant linter.
+
+Statically proves the transport, memory, precision, and Pallas-kernel
+guarantees the trainer configs rely on (see docs/analysis.md for the
+rule catalogue).  Entry points:
+
+  * ``analyze_trainer(tr)`` — lint a built ``ParallelADMMTrainer``'s
+    compiled step against its own host-side plan;
+  * ``analyze_hlo(text, expectations)`` — lint any HLO dump;
+  * ``no_findings(report, rule=...)`` — the pytest-side assertion;
+  * ``launch/analyze.py`` — the CLI over the benchmark configs.
+"""
+from repro.analysis.findings import (Finding, Report, Severity, Waiver,
+                                     no_findings)
+from repro.analysis.registry import (AnalysisContext, Rule, all_rules,
+                                     analyze_hlo, get_rule, rule, run_rules)
+from repro.analysis.trainer import analyze_trainer, trainer_expectations
+
+__all__ = [
+    "AnalysisContext", "Finding", "Report", "Rule", "Severity", "Waiver",
+    "all_rules", "analyze_hlo", "analyze_trainer", "get_rule",
+    "no_findings", "rule", "run_rules", "trainer_expectations",
+]

@@ -1,0 +1,362 @@
+"""Optimized-HLO text parsing and the trip-count-aware census.
+
+This is the parsing substrate every HLO-level lint rule and the roofline
+share (it moved here from ``launch/roofline.py``, which re-exports the
+public names for its callers).  ``compiled.cost_analysis()`` counts every
+HLO op ONCE — loop bodies (lax.scan over layers, grad-accumulation
+microbatches, backtracking line searches) are not multiplied by their trip
+counts, so its FLOPs understate a scanned stack by ~L×.  This module
+instead walks the optimized HLO text:
+
+  * computations are parsed into instruction lists (``parse_hlo``);
+  * ``while`` ops multiply their body's costs by the trip count recovered
+    from the loop condition (canonical `i < C` compare against a constant);
+  * ``fusion`` / ``call`` / ``conditional`` recurse with multiplier 1;
+  * FLOPs: 2·prod(result_dims)·K for every dot (K = contracted lhs dims),
+    plus convolution terms;
+  * collective bytes: operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (trip-weighted);
+  * HBM byte proxy: operand+result sizes at fusion granularity (fusion
+    internals live in registers/VMEM), trip-weighted.
+
+Beyond the census, the analysis rules (``repro.analysis.rules``) consume
+the raw ``Instr`` stream via ``iter_instructions`` — severities, rule ids
+and waivers live there, this module stays a pure parser.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Iterator, Optional
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "u4": 1, "s4": 1,
+}
+
+# skip these when accumulating the HBM-traffic proxy
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "iota", "broadcast", "while", "conditional", "call",
+               "custom-call", "copy-start", "copy-done"}
+
+# ops that touch only a slice of their big operand (in-place / sparse):
+# counting the full operand would blow up trip-weighted loops (a DUS into a
+# stacked (L, ...) buffer reads the slice, not the whole buffer)
+_SLICE_TRAFFIC = {"dynamic-update-slice", "dynamic-slice", "gather",
+                  "scatter", "slice", "pad", "concatenate"}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_bytes: int
+    result_dims: tuple[int, ...]
+    dtype: str
+    operands: list[str]
+    attrs: str
+    tuple_bytes: int = 0       # for tuple-typed results
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+
+
+# computation definitions start at column 0: "%name (args...) -> type {"
+# (args may contain nested parens — match only the name and trailing '{')
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_SHAPED = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_OPNAME = re.compile(r"([a-z][\w\-]*)\(")
+
+
+def _parse_shape_bytes(type_str: str) -> tuple[int, tuple[int, ...], str]:
+    m = _SHAPED.match(type_str.strip())
+    if not m:
+        return 0, (), ""
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0, (), ""
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    n = 1
+    for d in shape:
+        n *= d
+    return n * _DTYPE_BYTES[dtype], shape, dtype
+
+
+def _operand_names(body: str, opname: str) -> list[str]:
+    """Operand instruction names from 'op(...)' (first balanced parens)."""
+    idx = body.find(opname + "(")
+    if idx < 0:
+        return []
+    tail = body[idx + len(opname) + 1:]
+    depth, args = 1, ""
+    for ch in tail:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        args += ch
+    names = []
+    for a in args.split(","):
+        # operands are written "f32[16,16]{1,0} %name" — the name follows
+        # the (optional) type annotation, so search, don't anchor
+        m = re.search(r"%([\w.\-]+)", a)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            if line and not line[0].isspace():
+                m = _COMP_START.match(line)
+                if m:
+                    current = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, body = m.groups()
+        # result type: up to the op name
+        if body.startswith("("):
+            # tuple type: find matching ')' then op
+            depth, i = 0, 0
+            for i, ch in enumerate(body):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            tuple_type, rest = body[:i + 1], body[i + 1:]
+            tbytes = sum(_parse_shape_bytes(f"{d}[{s}]")[0]
+                         for d, s in _SHAPED.findall(tuple_type))
+            rbytes, rdims, dtype = 0, (), ""
+        else:
+            parts = body.split(None, 1)
+            rbytes, rdims, dtype = _parse_shape_bytes(parts[0])
+            rest = parts[1] if len(parts) > 1 else ""
+            tbytes = 0
+        om = _OPNAME.search(rest)
+        op = om.group(1) if om else ""
+        operands = _operand_names(rest, op) if op else []
+        current.instrs.append(Instr(name, op, rbytes, rdims, dtype,
+                                    operands, rest, tbytes))
+    return comps
+
+
+def iter_instructions(comps: dict[str, Computation]
+                      ) -> Iterator[tuple[Computation, Instr]]:
+    """Every instruction of every computation, with its computation."""
+    for comp in comps.values():
+        for ins in comp.instrs:
+            yield comp, ins
+
+
+def entry_computation(text: str, comps: dict[str, Computation]) -> str:
+    """Name of the ENTRY computation (fallback: the largest one)."""
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                return m.group(1)
+            break
+    return max(comps, key=lambda k: len(comps[k].instrs))
+
+
+_PAIRS = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_PAIR = re.compile(r"\{(\d+),(\d+)\}")
+
+
+def permute_pairs(ins: Instr) -> frozenset[tuple[int, int]]:
+    """The ``source_target_pairs`` of a collective-permute instruction."""
+    m = _PAIRS.search(ins.attrs)
+    if not m:
+        return frozenset()
+    return frozenset((int(a), int(b)) for a, b in _PAIR.findall(m.group(1)))
+
+
+def base_op(ins: Instr) -> str:
+    """Async collectives split into -start/-done; fold onto the base op."""
+    for suffix in ("-start", "-done"):
+        if ins.op.endswith(suffix):
+            return ins.op[:-len(suffix)]
+    return ins.op
+
+
+def _trip_count(cond: Computation) -> int:
+    """Canonical scan condition: compare(i, C) direction=LT with C constant
+    (possibly via a wrapped fusion). Fallback: any s32 scalar constant."""
+    consts: dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.op == "constant" and ins.dtype in ("s32", "u32", "s64"):
+            m = re.search(r"constant\((\d+)\)", ins.attrs)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if "direction=LT" in ins.attrs or ins.op == "compare" \
+                or "compare" in ins.attrs:
+            for o in ins.operands:
+                if o in consts:
+                    return consts[o]
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+
+
+def _dot_flops(ins: Instr, sizes: dict[str, tuple[int, ...]]) -> float:
+    """2 · prod(result) · K, K = product of lhs contracting dims."""
+    res = 1
+    for d in ins.result_dims:
+        res *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    k = 1
+    if m and ins.operands:
+        lhs_shape = sizes.get(ins.operands[0], ())
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_shape):
+                k *= lhs_shape[int(idx)]
+    return 2.0 * res * k
+
+
+@dataclasses.dataclass
+class Census:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {op: {"count": 0, "bytes": 0.0}
+                                 for op in COLLECTIVE_OPS})
+    while_trips: list = dataclasses.field(default_factory=list)
+
+    def scaled_add(self, other: "Census", mult: float) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for op in COLLECTIVE_OPS:
+            self.collectives[op]["count"] += other.collectives[op]["count"] * mult
+            self.collectives[op]["bytes"] += other.collectives[op]["bytes"] * mult
+        self.while_trips.extend(other.while_trips)
+
+
+def hlo_census(text: str) -> Census:
+    comps = parse_hlo(text)
+    # result shapes per instruction name (for dot K lookup), global
+    shapes: dict[str, tuple[int, ...]] = {}
+    bytes_of: dict[str, int] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.result_dims
+            bytes_of[ins.name] = ins.result_bytes or ins.tuple_bytes
+
+    memo: dict[str, Census] = {}
+
+    def walk(name: str) -> Census:
+        if name in memo:
+            return memo[name]
+        memo[name] = Census()          # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        c = Census()
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                c.flops += _dot_flops(ins, shapes)
+            elif ins.op == "convolution":
+                # 2 · result_size · (kernel elements / out_channels)
+                res = 1
+                for d in ins.result_dims:
+                    res *= d
+                kern = 1
+                if len(ins.operands) > 1:
+                    for d in shapes.get(ins.operands[1], ()):
+                        kern *= d
+                out_ch = ins.result_dims[-1] if ins.result_dims else 1
+                c.flops += 2.0 * res * max(kern, 1) / max(out_ch, 1)
+            bop = base_op(ins) if ins.op.endswith("-start") else ins.op
+            if bop in COLLECTIVE_OPS:
+                nbytes = sum(bytes_of.get(o, 0) for o in ins.operands)
+                if bop == "all-gather":
+                    # per-device wire volume: the (n_shards-1)/n_shards of
+                    # the gathered result received from peers.  The operand
+                    # alone (this shard's contribution) understates a ring
+                    # all-gather by n_shards×, which would make it look
+                    # cheaper than a neighbour-only permute schedule that
+                    # moves strictly fewer rows.  An async all-gather-start
+                    # carries its input buffer inside the result tuple —
+                    # drop it before subtracting the own contribution.
+                    total = ins.result_bytes
+                    if not total and ins.tuple_bytes:
+                        total = ins.tuple_bytes - nbytes
+                    nbytes = max(total - nbytes, nbytes)
+                c.collective_bytes += nbytes
+                c.collectives[bop]["count"] += 1
+                c.collectives[bop]["bytes"] += nbytes
+            # HBM traffic proxy at fusion granularity
+            if ins.op and ins.op not in _NO_TRAFFIC:
+                out_b = ins.result_bytes or ins.tuple_bytes
+                if ins.op in _SLICE_TRAFFIC:
+                    if ins.op == "dynamic-update-slice" and \
+                            len(ins.operands) > 1:
+                        upd = bytes_of.get(ins.operands[1], 0)
+                        c.hbm_bytes += 2 * upd
+                    else:
+                        c.hbm_bytes += 2 * out_b
+                else:
+                    in_b = sum(bytes_of.get(o, 0) for o in ins.operands)
+                    c.hbm_bytes += out_b + in_b
+            # recurse
+            if ins.op == "while":
+                bm, cm = _BODY.search(ins.attrs), _COND.search(ins.attrs)
+                trip = _trip_count(comps[cm.group(1)]) if cm and \
+                    cm.group(1) in comps else 1
+                c.while_trips.append(trip)
+                if bm and bm.group(1) in comps:
+                    c.scaled_add(walk(bm.group(1)), trip)
+            else:
+                cm = _CALLS.search(ins.attrs)
+                if cm and cm.group(1) in comps:
+                    sub = walk(cm.group(1))
+                    # fusion internals are not HBM traffic; flops/colls are
+                    sub2 = Census(flops=sub.flops,
+                                  collective_bytes=sub.collective_bytes,
+                                  collectives=sub.collectives,
+                                  while_trips=sub.while_trips)
+                    c.scaled_add(sub2, 1.0)
+        memo[name] = c
+        return c
+
+    return walk(entry_computation(text, comps))
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Trip-count-aware collective census (kept as the dryrun JSON field)."""
+    c = hlo_census(hlo_text)
+    out: dict[str, Any] = {
+        op: {"count": c.collectives[op]["count"],
+             "bytes": c.collectives[op]["bytes"]}
+        for op in COLLECTIVE_OPS}
+    out["total_bytes"] = c.collective_bytes
+    return out

@@ -1,0 +1,4 @@
+"""Built-in rule families.  Importing a module registers its rules."""
+from repro.analysis.rules import collective, memory, pallas, precision
+
+__all__ = ["collective", "memory", "pallas", "precision"]

@@ -1,0 +1,125 @@
+"""Memory rules: nothing dense-adjacency-shaped, nothing over budget,
+donated hot-loop buffers, no host round-trips.
+
+PR 2's win was replacing the (M, M, n_pad, n_pad) dense adjacency with
+block-compressed storage; these rules keep any program from silently
+re-materialising it (or any other HBM blow-up) in an intermediate.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.registry import AnalysisContext, rule
+
+
+@rule("memory/no-dense-adjacency")
+def no_dense_adjacency(ctx: AnalysisContext) -> Iterable[Finding]:
+    """No intermediate shaped like a dense block-adjacency row stack:
+    trailing dims (n_pad, n_pad) with more leading blocks than the ELL
+    bound lanes x max_deg allows."""
+    exp = ctx.expectations
+    n_pad = exp.get("n_pad")
+    if ctx.hlo_text is None or not n_pad:
+        return
+    if exp.get("dense_adjacency_allowed"):
+        return
+    lanes = exp.get("lanes", 1)
+    m_total = exp.get("m_total", 1)
+    max_deg = exp.get("max_deg", m_total)
+    # inputs may legitimately hold the full-M ELL block store (the trainer
+    # closes over it); anything *computed* is bound by one shard's ELL
+    # working set
+    input_blocks = max(int(m_total) * int(max_deg), 1)
+    compute_blocks = max(int(lanes) * int(max_deg), 1)
+    for comp, ins in ctx.instructions():
+        dims = ins.result_dims
+        if len(dims) < 3 or dims[-1] != n_pad or dims[-2] != n_pad:
+            continue
+        blocks = 1
+        for d in dims[:-2]:
+            blocks *= d
+        allowed_blocks = input_blocks if ins.op in ("parameter", "constant") \
+            else compute_blocks
+        if blocks > allowed_blocks:
+            yield Finding(
+                "memory/no-dense-adjacency", Severity.ERROR,
+                f"%{ins.name} ({ins.op}) materialises {blocks} "
+                f"({n_pad}x{n_pad}) blocks — dense-adjacency shaped; the "
+                f"ELL bound is lanes x max_deg = {allowed_blocks}",
+                location=ins.name,
+                details={"shape": list(dims), "blocks": blocks,
+                         "allowed_blocks": allowed_blocks,
+                         "computation": comp.name})
+
+
+@rule("memory/hbm-intermediate-budget")
+def hbm_intermediate_budget(ctx: AnalysisContext) -> Iterable[Finding]:
+    """No single intermediate exceeds ``hbm_intermediate_budget`` bytes."""
+    budget = ctx.expectations.get("hbm_intermediate_budget")
+    if ctx.hlo_text is None or budget is None:
+        return
+    for comp, ins in ctx.instructions():
+        nbytes = max(ins.result_bytes, ins.tuple_bytes)
+        if nbytes > budget and ins.op not in ("tuple", "parameter"):
+            yield Finding(
+                "memory/hbm-intermediate-budget", Severity.ERROR,
+                f"%{ins.name} ({ins.op}) holds {nbytes} B "
+                f"> budget {int(budget)} B",
+                location=ins.name,
+                details={"bytes": nbytes, "budget": int(budget),
+                         "shape": list(ins.result_dims),
+                         "computation": comp.name})
+
+
+@rule("memory/donated-inputs")
+def donated_inputs(ctx: AnalysisContext) -> Iterable[Finding]:
+    """The trainer-step jit donates its state (Z/U stacks rebind every
+    step; un-donated they double peak HBM)."""
+    donated = ctx.expectations.get("args_donated")
+    want = ctx.expectations.get("expect_donated")
+    if not donated or not want:
+        return
+    for needle in want:
+        matching = {p: d for p, d in donated.items()
+                    if needle.lower() in p.lower()}
+        if not matching:
+            yield Finding(
+                "memory/donated-inputs", Severity.WARNING,
+                f"no trainer-step argument matches '{needle}' — "
+                f"donation expectation is stale",
+                details={"expected": needle,
+                         "args": sorted(donated)[:16]})
+            continue
+        undonated = sorted(p for p, d in matching.items() if not d)
+        if undonated:
+            yield Finding(
+                "memory/donated-inputs", Severity.ERROR,
+                f"{len(undonated)} '{needle}' buffer(s) not donated to the "
+                f"step jit (first: {undonated[0]})",
+                location=undonated[0],
+                details={"expected": needle, "undonated": undonated[:16]})
+
+
+_HOST_OPS = {"infeed", "outfeed", "send", "recv", "send-done", "recv-done"}
+_HOST_TARGETS = ("callback", "host", "Infeed", "Outfeed")
+
+
+@rule("memory/host-transfer")
+def host_transfer(ctx: AnalysisContext) -> Iterable[Finding]:
+    """The compiled step makes no host<->device round-trips (infeed/
+    outfeed/send/recv or host-callback custom-calls in the hot loop)."""
+    if ctx.hlo_text is None:
+        return
+    for comp, ins in ctx.instructions():
+        hit = ins.op in _HOST_OPS
+        if not hit and ins.op == "custom-call":
+            hit = any(t in ins.attrs for t in _HOST_TARGETS)
+        if hit:
+            yield Finding(
+                "memory/host-transfer", Severity.ERROR,
+                f"%{ins.name} ({ins.op}) transfers to/from host inside "
+                f"the compiled step",
+                location=ins.name,
+                details={"computation": comp.name,
+                         "attrs": ins.attrs[:160]})

@@ -1,0 +1,161 @@
+"""Precision rules: bf16 stays on the wire/storage side, never in the
+accumulator.
+
+PR 5's mixed-precision contract: bf16 is a *transport and storage* format
+(wire payloads, ELL blocks) while every dot/reduce accumulates in f32.
+These rules prove it two ways — a dataflow walk over the traced jaxpr
+(catches a missing ``preferred_element_type`` before XLA ever runs) and a
+scan over the optimized HLO (catches what the compiler actually emitted).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, List
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.registry import AnalysisContext, rule
+
+_LOW = ("bf16", "f16")
+_WIDE = ("f64", "c128")
+
+
+def _dtype_map(ctx: AnalysisContext) -> dict[str, str]:
+    return {ins.name: ins.dtype for _, ins in ctx.instructions()}
+
+
+@rule("precision/bf16-dot-accumulate")
+def bf16_dot_accumulate(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Every dot fed bf16/f16 operands accumulates in f32 (an
+    ``f32 dot(bf16, bf16)`` is the blessed pattern; a bf16-result dot
+    silently rounds every partial sum)."""
+    if ctx.hlo_text is None:
+        return
+    dtypes = _dtype_map(ctx)
+    for comp, ins in ctx.instructions():
+        if ins.op != "dot":
+            continue
+        low_in = [o for o in ins.operands if dtypes.get(o) in _LOW]
+        if low_in and ins.dtype in _LOW:
+            yield Finding(
+                "precision/bf16-dot-accumulate", Severity.ERROR,
+                f"%{ins.name}: dot over {ins.dtype} operands accumulates "
+                f"in {ins.dtype} (no f32 upcast)",
+                location=ins.name,
+                details={"computation": comp.name,
+                         "operand_dtypes": [dtypes.get(o, "?")
+                                            for o in ins.operands],
+                         "result_dtype": ins.dtype})
+
+
+@rule("precision/bf16-reduce", severity=Severity.WARNING)
+def bf16_reduce(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Reductions over bf16 carry the accumulator in f32 (warning: XLA
+    sometimes keeps small reduces in bf16 harmlessly)."""
+    if ctx.hlo_text is None:
+        return
+    dtypes = _dtype_map(ctx)
+    for comp, ins in ctx.instructions():
+        if ins.op != "reduce" or ins.dtype not in _LOW:
+            continue
+        if any(dtypes.get(o) in _LOW for o in ins.operands):
+            yield Finding(
+                "precision/bf16-reduce", Severity.WARNING,
+                f"%{ins.name}: reduce accumulates in {ins.dtype}",
+                location=ins.name,
+                details={"computation": comp.name,
+                         "result_dtype": ins.dtype})
+
+
+@rule("precision/no-f64")
+def no_f64(ctx: AnalysisContext) -> Iterable[Finding]:
+    """No f64/c128 values anywhere in the compiled step (an accidental
+    Python-float promotion doubles bytes on wire and in HBM)."""
+    if ctx.hlo_text is None or ctx.expectations.get("allow_f64"):
+        return
+    for comp, ins in ctx.instructions():
+        if ins.dtype in _WIDE:
+            yield Finding(
+                "precision/no-f64", Severity.ERROR,
+                f"%{ins.name} ({ins.op}) is {ins.dtype}",
+                location=ins.name,
+                details={"computation": comp.name,
+                         "shape": list(ins.result_dims)})
+
+
+# --- jaxpr dataflow walk ---------------------------------------------------
+
+def check_jaxpr_precision(closed_jaxpr: Any,
+                          allow_f64: bool = False) -> List[Finding]:
+    """Recursive dataflow walk over a ClosedJaxpr: flag bf16 dots without
+    an f32 ``preferred_element_type``, bf16 reduce accumulators, and
+    f64 avals.  Importable directly for ad-hoc checks; the registry rule
+    wraps it when the context carries a jaxpr."""
+    import numpy as np
+
+    findings: list[Finding] = []
+    seen: set[int] = set()
+
+    def dt(v: Any) -> Any:
+        return getattr(getattr(v, "aval", None), "dtype", None)
+
+    def is_low(v: Any) -> bool:
+        d = dt(v)
+        return d is not None and str(d) in ("bfloat16", "float16")
+
+    def walk(jaxpr: Any, path: str) -> None:
+        if id(jaxpr) in seen:
+            return
+        seen.add(id(jaxpr))
+        for i, eqn in enumerate(jaxpr.eqns):
+            name = eqn.primitive.name
+            loc = f"{path}eqns[{i}]:{name}"
+            if not allow_f64:
+                for v in list(eqn.invars) + list(eqn.outvars):
+                    d = dt(v)
+                    if d is not None and str(d) in ("float64", "complex128"):
+                        findings.append(Finding(
+                            "precision/jaxpr-dataflow", Severity.ERROR,
+                            f"{name} carries {d} (x64 leak)",
+                            location=loc, details={"dtype": str(d)}))
+                        break
+            if name == "dot_general" and any(is_low(v) for v in eqn.invars):
+                pref = eqn.params.get("preferred_element_type")
+                out_low = any(is_low(v) for v in eqn.outvars)
+                if out_low and (pref is None or str(np.dtype(pref)) not in
+                                ("float32", "float64")):
+                    findings.append(Finding(
+                        "precision/jaxpr-dataflow", Severity.ERROR,
+                        "dot_general over bf16/f16 operands has no f32 "
+                        "preferred_element_type (accumulates narrow)",
+                        location=loc,
+                        details={"preferred_element_type": str(pref)}))
+            if name in ("reduce_sum", "cumsum") and \
+                    any(is_low(v) for v in eqn.outvars):
+                findings.append(Finding(
+                    "precision/jaxpr-dataflow", Severity.WARNING,
+                    f"{name} accumulates in bf16/f16",
+                    location=loc, details={}))
+            for sub in _sub_jaxprs(eqn.params):
+                walk(sub, loc + "/")
+
+    inner = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    walk(inner, "")
+    return findings
+
+
+def _sub_jaxprs(params: dict) -> Iterable[Any]:
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vals:
+            x = getattr(x, "jaxpr", x)
+            if hasattr(x, "eqns"):
+                yield x
+
+
+@rule("precision/jaxpr-dataflow")
+def jaxpr_dataflow(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Dataflow walk over the traced jaxpr: bf16 into dot/reduce without
+    f32 upcast, and f64 leaks, caught before compilation."""
+    if ctx.jaxpr is None:
+        return
+    yield from check_jaxpr_precision(
+        ctx.jaxpr, allow_f64=bool(ctx.expectations.get("allow_f64")))

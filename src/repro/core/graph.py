@@ -168,7 +168,7 @@ def pad_ladder(limit: int) -> list[int]:
     return sorted(vals)
 
 
-def bucket_pad_sizes(sizes, n_pad: int) -> Array:
+def bucket_pad_sizes(sizes: Array, n_pad: int) -> Array:
     """Per-community padded row counts under the bucket scheme.
 
     Each community pads to the smallest ladder bucket ≥ its size, capped at

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -62,8 +62,8 @@ def relay_aggregate(a_row: Array, z_all: Array, w_next: Array,
     return row_aggregate(a_row, z_all, mask) @ w_next
 
 
-def gather_bytes(neighbor_mask, n_pad: int, feature_dims: Sequence[int],
-                 itemsize: int = 4) -> dict:
+def gather_bytes(neighbor_mask: np.ndarray, n_pad: int,
+                 feature_dims: Sequence[int], itemsize: int = 4) -> dict:
     """Collective bytes per ADMM iteration: full all-gather vs the
     neighbour-only volume the paper's topology actually needs.
 
@@ -84,7 +84,8 @@ def gather_bytes(neighbor_mask, n_pad: int, feature_dims: Sequence[int],
             "savings_ratio": 1.0 - (needed / full if full else 0.0)}
 
 
-def adjacency_bytes(neighbor_mask, n_pad: int, itemsize: int = 4) -> dict:
+def adjacency_bytes(neighbor_mask: np.ndarray, n_pad: int,
+                    itemsize: int = 4) -> dict:
     """Device-resident adjacency bytes per representation.
 
     ``dense_bytes`` is the replicated-layout block tensor the parallel
@@ -119,7 +120,8 @@ def adjacency_bytes(neighbor_mask, n_pad: int, itemsize: int = 4) -> dict:
     }
 
 
-def pad_stats(neighbor_mask, sizes, row_counts, n_pad: int,
+def pad_stats(neighbor_mask: np.ndarray, sizes: np.ndarray,
+              row_counts: np.ndarray, n_pad: int,
               feature_dims: Sequence[int], itemsize: int = 4) -> dict:
     """Residual-padding accounting of a (possibly ragged) layout.
 
@@ -233,7 +235,8 @@ class NeighborExchange:
         """global community id -> receive-buffer slot on ``shard``."""
         return {int(r): i for i, r in enumerate(self.needed_ids[shard])}
 
-    def localize_indices(self, ell_indices, ell_mask) -> np.ndarray:
+    def localize_indices(self, ell_indices: np.ndarray,
+                         ell_mask: np.ndarray) -> np.ndarray:
         """Remap global ELL neighbour ids to receive-buffer slots.
 
         ``ell_indices``: (M, max_deg) global community ids (community-major
@@ -254,8 +257,10 @@ class NeighborExchange:
         return out
 
 
-def build_neighbor_exchange(neighbor_mask, n_shards: int, n_pad: int,
-                            sizes=None) -> NeighborExchange:
+def build_neighbor_exchange(neighbor_mask: np.ndarray, n_shards: int,
+                            n_pad: int,
+                            sizes: np.ndarray | None = None
+                            ) -> NeighborExchange:
     """Construct the static round schedule for a community topology.
 
     ``sizes`` (optional, (M,) true rows per community) switches the plan to
@@ -352,7 +357,8 @@ def build_neighbor_exchange(neighbor_mask, n_shards: int, n_pad: int,
         sizes=tuple(int(v) for v in wired), row_exact=row_exact)
 
 
-def bf16_wire(collective, payload: Array) -> Array:
+def bf16_wire(collective: Callable[[Array], Array],
+              payload: Array) -> Array:
     """Run ``collective`` on a bf16-compressed payload (half the wire
     bytes) and restore the operand dtype.  The bf16 value travels bitcast
     as uint16 — a plain convert would be hoisted back to f32 by XLA's

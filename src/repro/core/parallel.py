@@ -169,14 +169,14 @@ def community_data(g: graph.Graph, layout: graph.CommunityLayout,
         csr = layout.compress()
         rows, nbrs = csr.ell_row_counts()
         block_dt = jnp.bfloat16 if adjacency_bf16 else jnp.float32
-        adj = dict(a_blocks=None,
-                   ell_blocks=jnp.asarray(csr.ell_blocks, dtype=block_dt),
-                   ell_indices=jnp.asarray(csr.ell_indices),
-                   ell_mask=jnp.asarray(csr.ell_mask),
-                   row_counts=jnp.asarray(rows),
-                   nbr_counts=jnp.asarray(nbrs))
+        adj = {"a_blocks": None,
+               "ell_blocks": jnp.asarray(csr.ell_blocks, dtype=block_dt),
+               "ell_indices": jnp.asarray(csr.ell_indices),
+               "ell_mask": jnp.asarray(csr.ell_mask),
+               "row_counts": jnp.asarray(rows),
+               "nbr_counts": jnp.asarray(nbrs)}
     else:
-        adj = dict(a_blocks=jnp.asarray(layout.a_blocks))
+        adj = {"a_blocks": jnp.asarray(layout.a_blocks)}
     return CommunityData(
         z0=jnp.asarray(layout.pack(g.features)),
         labels=jnp.asarray(layout.pack(g.labels.astype(np.int32))),
@@ -630,7 +630,10 @@ class ParallelADMMTrainer:
         mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_rep=False)
 
-        @jax.jit
+        # the state rebinds every step: donating it lets XLA reuse the
+        # Z/U/weight buffers in place instead of doubling peak HBM
+        # (memory/donated-inputs proves this holds on the compiled step)
+        @partial(jax.jit, donate_argnums=(0,))
         def step(state: ParallelState):
             ws, zs, u, taus, thetas = mapped(
                 adj_data, self.data.neighbor_mask,

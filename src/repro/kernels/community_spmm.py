@@ -22,10 +22,18 @@ Two kernels over the same math:
   z_all:  (M, n_pad, C)       gathered community features
   mask:   (M,)                neighbour mask (True = nonzero block)
   out:    (n_pad, C)
+
+Both kernels derive their grid, block shapes and index maps from a
+declarative ``KernelSpec`` (``spmm_spec`` / ``ell_spec``) which
+``repro.analysis.rules.pallas`` abstract-interprets to bound every block
+DMA against the operand shapes and to estimate the VMEM footprint — the
+kernel and the linter read the *same* spec, so they cannot drift.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +41,125 @@ from jax.experimental import pallas as pl
 
 DEFAULT_TILE_N = 256     # rows per tile (8-aligned; 256 divides n_pad)
 DEFAULT_TILE_C = 256     # feature cols per tile (128-aligned)
+
+
+# ---------------------------------------------------------------------------
+# Declarative kernel specs (shared by pallas_call and the static linter)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockOperand:
+    """One pallas operand: array shape, block shape, and the index map.
+
+    ``index_map`` has the exact pallas signature — grid ids first, then
+    any scalar-prefetch operands — and works equally on traced refs (in
+    the kernel) and numpy arrays (in the linter).  ``gather_scalar``
+    names the scalar-prefetch array whose *values* select this operand's
+    leading block (data-dependent DMA): the linter bounds that array's
+    value range against the leading block count.
+    """
+    name: str
+    array_shape: tuple[int, ...]
+    block_shape: tuple[Optional[int], ...]
+    index_map: Callable[..., tuple]
+    dtype_bytes: int = 4
+    gather_scalar: Optional[str] = None
+
+    def block_bytes(self) -> int:
+        n = 1
+        for b in self.block_shape:
+            if b is not None:
+                n *= b
+        return n * self.dtype_bytes
+
+    def block_counts(self) -> tuple[int, ...]:
+        """Valid block-index range per dim (None dims index elements)."""
+        return tuple(dim if b is None else -(-dim // b)
+                     for dim, b in zip(self.array_shape, self.block_shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Grid + operands (inputs then output) + scratch, linter-checkable."""
+    name: str
+    grid: tuple[int, ...]
+    operands: tuple[BlockOperand, ...]
+    scratch_bytes: int = 0
+    scalar_prefetch: tuple[str, ...] = ()
+
+    def vmem_bytes(self) -> int:
+        """Footprint estimate: double-buffered operand/output blocks
+        (pallas pipelines the DMAs) plus accumulator scratch."""
+        return (2 * sum(op.block_bytes() for op in self.operands)
+                + self.scratch_bytes)
+
+
+def _shrink(total: int, tile: int) -> int:
+    tile = min(tile, total)
+    while total % tile:
+        tile //= 2
+    return max(tile, 1)
+
+
+def spmm_spec(m: int, n_pad: int, c: int, *,
+              tile_n: int = DEFAULT_TILE_N, tile_c: int = DEFAULT_TILE_C,
+              a_bytes: int = 4, z_bytes: int = 4) -> KernelSpec:
+    """Spec for the dense-block kernel (grid: row-tiles, col-tiles, M)."""
+    tile_n = _shrink(n_pad, tile_n)
+    tile_c = _shrink(c, tile_c)
+    return KernelSpec(
+        name="community_spmm",
+        grid=(n_pad // tile_n, c // tile_c, m),
+        operands=(
+            BlockOperand("mask", (m,), (m,),
+                         lambda i, j, r: (0,), 4),
+            BlockOperand("a_row", (m, n_pad, n_pad),
+                         (None, tile_n, n_pad),
+                         lambda i, j, r: (r, i, 0), a_bytes),
+            BlockOperand("z_all", (m, n_pad, c),
+                         (None, n_pad, tile_c),
+                         lambda i, j, r: (r, 0, j), z_bytes),
+            BlockOperand("out", (n_pad, c), (tile_n, tile_c),
+                         lambda i, j, r: (i, j), z_bytes),
+        ),
+        scratch_bytes=tile_n * tile_c * 4)
+
+
+def ell_spec(k: int, max_deg: int, n_pad: int, c: int, m_total: int, *,
+             tile_n: int = DEFAULT_TILE_N, tile_c: int = DEFAULT_TILE_C,
+             tile_p: Optional[int] = None,
+             block_bytes: int = 4, z_bytes: int = 4) -> KernelSpec:
+    """Spec for the ELL kernel (grid: k, row-tiles, col-tiles, max_deg,
+    contraction-tiles; scalar-prefetched ``ell_indices`` steer the Z DMA)."""
+    tile_n = _shrink(n_pad, tile_n)
+    tile_c = _shrink(c, tile_c)
+    tile_p = _shrink(n_pad, tile_n if tile_p is None else tile_p)
+    return KernelSpec(
+        name="community_spmm_ell",
+        grid=(k, n_pad // tile_n, c // tile_c, max_deg, n_pad // tile_p),
+        operands=(
+            BlockOperand("ell_blocks", (k, max_deg, n_pad, n_pad),
+                         (None, None, tile_n, tile_p),
+                         lambda m, i, j, d, p, idx, msk, rows, nbr:
+                         (m, d, i, p), block_bytes),
+            BlockOperand("z_all", (m_total, n_pad, c),
+                         (None, tile_p, tile_c),
+                         lambda m, i, j, d, p, idx, msk, rows, nbr:
+                         (idx[m, d], p, j), z_bytes,
+                         gather_scalar="ell_indices"),
+            BlockOperand("out", (k, n_pad, c), (None, tile_n, tile_c),
+                         lambda m, i, j, d, p, idx, msk, rows, nbr:
+                         (m, i, j), z_bytes),
+        ),
+        scratch_bytes=tile_n * tile_c * 4,
+        scalar_prefetch=("ell_indices", "ell_mask",
+                         "row_counts", "nbr_counts"))
+
+
+# ---------------------------------------------------------------------------
+# Dense-block kernel
+# ---------------------------------------------------------------------------
 
 
 def _spmm_kernel(mask_ref, a_ref, z_ref, o_ref, acc_scr):
@@ -61,26 +188,22 @@ def community_spmm(a_row: jax.Array, z_all: jax.Array, mask: jax.Array,
                    interpret: bool = False) -> jax.Array:
     m, n_pad, _ = a_row.shape
     c = z_all.shape[-1]
-    tile_n = min(tile_n, n_pad)
-    tile_c = min(tile_c, c)
-    # shrink tiles to divide evenly (n_pad is 8-aligned by construction)
-    while n_pad % tile_n:
-        tile_n //= 2
-    while c % tile_c:
-        tile_c //= 2
-
-    grid = (n_pad // tile_n, c // tile_c, m)
+    spec = spmm_spec(m, n_pad, c, tile_n=tile_n, tile_c=tile_c,
+                     a_bytes=a_row.dtype.itemsize,
+                     z_bytes=z_all.dtype.itemsize)
+    mask_op, a_op, z_op, out_op = spec.operands
     return pl.pallas_call(
         _spmm_kernel,
-        grid=grid,
+        grid=spec.grid,
         in_specs=[
-            pl.BlockSpec((m,), lambda i, j, r: (0,)),   # block mask (SMEM)
-            pl.BlockSpec((None, tile_n, n_pad), lambda i, j, r: (r, i, 0)),
-            pl.BlockSpec((None, n_pad, tile_c), lambda i, j, r: (r, 0, j)),
+            pl.BlockSpec(mask_op.block_shape, mask_op.index_map),
+            pl.BlockSpec(a_op.block_shape, a_op.index_map),
+            pl.BlockSpec(z_op.block_shape, z_op.index_map),
         ],
-        out_specs=pl.BlockSpec((tile_n, tile_c), lambda i, j, r: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, c), z_all.dtype),
-        scratch_shapes=[_vmem_scratch((tile_n, tile_c))],
+        out_specs=pl.BlockSpec(out_op.block_shape, out_op.index_map),
+        out_shape=jax.ShapeDtypeStruct(out_op.array_shape, z_all.dtype),
+        scratch_shapes=[_vmem_scratch(
+            (out_op.block_shape[0], out_op.block_shape[1]))],
         interpret=interpret,
     )(mask.astype(jnp.int32), a_row, z_all)
 
@@ -170,43 +293,36 @@ def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
     from jax.experimental.pallas import tpu as pltpu
 
     k, max_deg, n_pad, _ = ell_blocks.shape
-    c = z_all.shape[-1]
-    tile_n = min(tile_n, n_pad)
-    tile_c = min(tile_c, c)
-    tile_p = tile_n if tile_p is None else min(tile_p, n_pad)
-    while n_pad % tile_n:
-        tile_n //= 2
-    while c % tile_c:
-        tile_c //= 2
-    while n_pad % tile_p:
-        tile_p //= 2
+    m_total, _, c = z_all.shape
+    spec = ell_spec(k, max_deg, n_pad, c, m_total,
+                    tile_n=tile_n, tile_c=tile_c, tile_p=tile_p,
+                    block_bytes=ell_blocks.dtype.itemsize,
+                    z_bytes=z_all.dtype.itemsize)
+    a_op, z_op, out_op = spec.operands
+    eff_tile_n = out_op.block_shape[1]
+    eff_tile_p = z_op.block_shape[1]
 
     if row_counts is None:
         row_counts = jnp.full((k,), n_pad, jnp.int32)
     if nbr_counts is None:
         nbr_counts = jnp.full((k, max_deg), n_pad, jnp.int32)
 
-    grid = (k, n_pad // tile_n, c // tile_c, max_deg, n_pad // tile_p)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,     # ell_indices, ell_mask, rows, nbrs (SMEM)
-        grid=grid,
+        grid=spec.grid,
         in_specs=[
-            pl.BlockSpec((None, None, tile_n, tile_p),
-                         lambda m, i, j, d, p, idx, msk, rows, nbr:
-                         (m, d, i, p)),
-            pl.BlockSpec((None, tile_p, tile_c),
-                         lambda m, i, j, d, p, idx, msk, rows, nbr:
-                         (idx[m, d], p, j)),
+            pl.BlockSpec(a_op.block_shape, a_op.index_map),
+            pl.BlockSpec(z_op.block_shape, z_op.index_map),
         ],
-        out_specs=pl.BlockSpec((None, tile_n, tile_c),
-                               lambda m, i, j, d, p, idx, msk, rows, nbr:
-                               (m, i, j)),
-        scratch_shapes=[pltpu.VMEM((tile_n, tile_c), jnp.float32)],
+        out_specs=pl.BlockSpec(out_op.block_shape, out_op.index_map),
+        scratch_shapes=[_vmem_scratch(
+            (out_op.block_shape[1], out_op.block_shape[2]))],
     )
     return pl.pallas_call(
-        functools.partial(_spmm_ell_kernel, tile_n=tile_n, tile_p=tile_p),
+        functools.partial(_spmm_ell_kernel, tile_n=eff_tile_n,
+                          tile_p=eff_tile_p),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((k, n_pad, c), z_all.dtype),
+        out_shape=jax.ShapeDtypeStruct(out_op.array_shape, z_all.dtype),
         interpret=interpret,
     )(ell_indices.astype(jnp.int32), ell_mask.astype(jnp.int32),
       row_counts.astype(jnp.int32), nbr_counts.astype(jnp.int32),

@@ -1,0 +1,133 @@
+"""CLI: run the invariant linter over the benchmark trainer configs.
+
+Builds each benchmark trainer (transport x pad-mode on the compressed
+layout, plus the dense baseline in full mode), compiles its step on a
+4-shard host mesh, runs the ``repro.analysis`` rule registry against the
+trainer's own host-side expectations, and writes a JSON report.  Exit
+status 1 if any error-severity finding survives its waivers — CI fails
+the build on that.
+
+    PYTHONPATH=src python src/repro/launch/analyze.py --quick
+    PYTHONPATH=src python src/repro/launch/analyze.py --out report.json
+
+The device-count flag must be set before jax initialises (a 1-shard mesh
+compiles no real collectives, which would make every transport rule
+vacuous), so jax/repro imports happen inside ``main`` after the env is
+prepared.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+N_SHARDS = 4
+
+# the four benchmark transport x pad-mode configs (--quick and CI);
+# full mode adds the dense baseline (the dense-adjacency rule is waived
+# there — that config IS the dense layout) and the bf16 wire/store path
+QUICK_CONFIGS = [
+    {"name": "p2p_global", "transport": "p2p", "pad_mode": "global"},
+    {"name": "p2p_bucketed", "transport": "p2p", "pad_mode": "bucketed"},
+    {"name": "allgather_global", "transport": "allgather",
+     "pad_mode": "global"},
+    {"name": "allgather_bucketed", "transport": "allgather",
+     "pad_mode": "bucketed"},
+]
+FULL_CONFIGS = QUICK_CONFIGS + [
+    {"name": "dense_allgather", "transport": "allgather",
+     "pad_mode": "global", "compressed": False},
+    {"name": "p2p_bf16", "transport": "p2p", "pad_mode": "bucketed",
+     "comm_bf16": True, "adjacency_bf16": True},
+]
+
+
+def _ensure_devices() -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={N_SHARDS}"
+        ).strip()
+
+
+def _build_trainer(spec: dict):
+    import jax
+
+    from repro.core import gcn, graph
+    from repro.core.parallel import AXIS, ParallelADMMTrainer
+    from repro.core.subproblems import ADMMConfig
+    from repro.util.compat import make_mesh
+
+    g, part = graph.synthetic_powerlaw_communities(
+        num_parts=8, nodes_per_part=12, attach=1, seed=0, feat_dim=8,
+        size_skew=0.8)
+    cfg = gcn.GCNConfig(layer_dims=(8, 8, g.num_classes))
+    admm = ADMMConfig(nu=1e-3, rho=1e-3)
+    mesh = make_mesh((N_SHARDS,), (AXIS,),
+                     devices=jax.devices()[:N_SHARDS])
+    return ParallelADMMTrainer(
+        cfg, admm, g, num_parts=8, seed=0, part=part, mesh=mesh,
+        compressed=spec.get("compressed", True),
+        transport=spec["transport"], pad_mode=spec["pad_mode"],
+        comm_bf16=spec.get("comm_bf16", False),
+        adjacency_bf16=spec.get("adjacency_bf16", False))
+
+
+def run_configs(configs: list[dict]) -> list:
+    from repro import analysis
+
+    # the dense baseline legitimately holds the dense block tensor; the
+    # rule is already gated on dense_adjacency_allowed, the waiver here
+    # documents the intent in the report
+    waivers = (analysis.Waiver(
+        "memory/no-dense-adjacency",
+        "the dense baseline IS the dense layout",
+        when={"compressed": False}),)
+    reports = []
+    for spec in configs:
+        tr = _build_trainer(spec)
+        reports.append(analysis.analyze_trainer(
+            tr, config=spec["name"], waivers=waivers))
+    return reports
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="invariant linter over the benchmark trainer configs")
+    ap.add_argument("--quick", action="store_true",
+                    help="the four transport x pad-mode configs only")
+    ap.add_argument("--config", action="append", default=None,
+                    help="run only the named config(s)")
+    ap.add_argument("--out", default="BENCH_analysis.json",
+                    help="JSON report path")
+    args = ap.parse_args(argv)
+
+    _ensure_devices()
+    configs = QUICK_CONFIGS if args.quick else FULL_CONFIGS
+    if args.config:
+        picked = set(args.config)
+        unknown = picked - {c["name"] for c in configs}
+        if unknown:
+            ap.error(f"unknown config(s): {sorted(unknown)}")
+        configs = [c for c in configs if c["name"] in picked]
+
+    reports = run_configs(configs)
+    n_err = 0
+    for rep in reports:
+        print(rep.summary())
+        n_err += len(rep.errors())
+    payload = {"n_shards": N_SHARDS,
+               "errors": n_err,
+               "reports": [r.to_dict() for r in reports]}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    print(f"wrote {args.out}: {len(reports)} config(s), "
+          f"{n_err} error finding(s)")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    os.pardir, os.pardir))
+    sys.exit(main())

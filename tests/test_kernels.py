@@ -12,8 +12,8 @@ from repro.kernels.ssd_scan import ssd_scan
 
 def _tol(dtype):
     # f32 tolerance covers matmul reassociation between tiled and dense paths
-    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
-        else dict(rtol=2e-4, atol=2e-4)
+    return {"rtol": 2e-2, "atol": 2e-2} if dtype == jnp.bfloat16 \
+        else {"rtol": 2e-4, "atol": 2e-4}
 
 
 # ---------------------------------------------------------------------------

@@ -333,12 +333,25 @@ lag_p, lag_a = float(p2p._lagrangian(p2p.state)), float(ag._lagrangian(ag.state)
 assert abs(lag_p - lag_a) <= 1e-4 * max(1.0, abs(lag_a)), (lag_p, lag_a)
 print("PARITY_OK")
 
-# --- HLO proof: the p2p step materialises no gathered payload ---
+# --- HLO proof via the analysis rules: the p2p step materialises no
+#     gathered payload, its permute schedule matches the host plan, and
+#     the full registry (memory, precision, donation) is clean ---
+from repro import analysis
 hlo_p2p = p2p._step.lower(p2p.state).compile().as_text()
 hlo_ag = ag._step.lower(ag.state).compile().as_text()
-assert "all-gather" not in hlo_p2p, "p2p step still all-gathers"
-assert "collective-permute" in hlo_p2p
-assert "all-gather" in hlo_ag
+rep = analysis.analyze_trainer(p2p, hlo_text=hlo_p2p, config="p2p-proof")
+assert analysis.no_findings(rep, rule="collective/no-allgather-under-p2p")
+assert analysis.no_findings(rep, rule="collective/permute-schedule")
+assert analysis.no_findings(rep, rule="memory/no-dense-adjacency")
+assert not rep.errors(), rep.summary()
+rep_ag = analysis.analyze_trainer(ag, hlo_text=hlo_ag, config="ag-oracle")
+assert not rep_ag.errors(), rep_ag.summary()
+# deliberate break: the allgather program under the p2p expectations must
+# trip exactly the rule that guards the transport contract
+bad = analysis.analyze_hlo(
+    hlo_ag, expectations=analysis.trainer_expectations(p2p))
+assert bad.findings_for("collective/no-allgather-under-p2p"), \
+    "linter missed the all-gather"
 c_p2p = roofline.hlo_census(hlo_p2p).collective_bytes
 c_ag = roofline.hlo_census(hlo_ag).collective_bytes
 assert 0 < c_p2p < c_ag, (c_p2p, c_ag)
@@ -417,9 +430,13 @@ np.testing.assert_allclose(np.asarray(ag.state.u), np.asarray(ml.state.u),
                            rtol=2e-4, atol=2e-5)
 print("TRANSPORT_PARITY_OK")
 
-# -- and the multilevel layout still compiles to a gather-free p2p step --
-hlo = ml._step.lower(ml.state).compile().as_text()
-assert "all-gather" not in hlo and "collective-permute" in hlo
+# -- and the multilevel layout still compiles to a gather-free p2p step
+#    (the analysis rules prove it, plus schedule/memory/precision) --
+from repro import analysis
+rep = analysis.analyze_trainer(ml, config="multilevel-p2p")
+assert analysis.no_findings(rep, rule="collective/no-allgather-under-p2p")
+assert analysis.no_findings(rep, rule="collective/permute-schedule")
+assert not rep.errors(), rep.summary()
 print("HLO_OK")
 """
 

@@ -12,7 +12,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import graph, messages
 from repro.core.subproblems import ADMMConfig, backtracking_step
 
-SETTINGS = dict(max_examples=25, deadline=None)
+SETTINGS = {"max_examples": 25, "deadline": None}
 
 
 def _random_graph(n, extra_edges, seed):

@@ -414,9 +414,12 @@ lag_r = float(rag._lagrangian(rag.state))
 assert abs(lag_s - lag_r) <= 1e-4 * max(1.0, abs(lag_s)), (lag_s, lag_r)
 print("SERIAL_PARITY_OK")
 
-# the ragged p2p step still compiles gather-free
-hlo = rag._step.lower(rag.state).compile().as_text()
-assert "all-gather" not in hlo and "collective-permute" in hlo
+# the ragged p2p step still compiles gather-free (analysis rule proof)
+from repro import analysis
+rep = analysis.analyze_trainer(rag, config="ragged-p2p")
+assert analysis.no_findings(rep, rule="collective/no-allgather-under-p2p")
+assert analysis.no_findings(rep, rule="collective/permute-schedule")
+assert not rep.errors(), rep.summary()
 print("HLO_OK")
 """
 
