@@ -90,7 +90,8 @@ def check_block_sparsity(payload: dict) -> None:
 def check_speedup(payload: dict) -> None:
     where = "BENCH_speedup"
     _fields(payload, {"quick": bool, "rows": list, "m32_wire": dict,
-                      "m32_partition": dict, "m32_ragged": dict}, where)
+                      "m32_partition": dict, "m32_ragged": dict,
+                      "m32_packed": dict}, where)
     modes = {r["mode"] for r in payload["rows"]}
     _require(modes == {"parallel", "compressed", "p2p", "p2p_ml"}, where,
              f"rows must cover parallel/compressed/p2p/p2p_ml, "
@@ -198,6 +199,46 @@ def check_speedup(payload: dict) -> None:
     _require(bu["wire_bytes"] <= ml["wire_bytes"], w,
              f"ragged wire {bu['wire_bytes']} on the skewed graph exceeds "
              f"the m32_partition multilevel wire {ml['wire_bytes']}")
+
+    # packed resident state on the same skewed M=32 graph: the Σ-bucket-rows
+    # plane must hold strictly fewer resident Z bytes than the strided
+    # (M, n_pad, C) layout, and the staged exchange schedule must hide a
+    # non-zero fraction of the wire behind per-arrival-group aggregation
+    # (exposed wire strictly inside the total).
+    pk = payload["m32_packed"]
+    w = f"{where}.m32_packed"
+    _fields(pk, {"M": int, "n_shards": int, "strided_rows": int,
+                 "packed_rows": int, "bucket_rows": int,
+                 "strided_z_bytes": int, "packed_z_bytes": int,
+                 "resident_reduction": numbers.Real, "wire_bytes": int,
+                 "overlap": dict, "roofline": dict}, w)
+    _require(pk["M"] == 32, w, "packed comparison must be at M=32")
+    _require(pk["packed_z_bytes"] < pk["strided_z_bytes"], w,
+             f"packed resident Z {pk['packed_z_bytes']} not below strided "
+             f"{pk['strided_z_bytes']}")
+    _require(pk["bucket_rows"] <= pk["packed_rows"] <= pk["strided_rows"],
+             w, "packed rows must sit between the Σ-bucket floor and the "
+                "strided row count")
+    ovl = pk["overlap"]
+    _fields(ovl, {"num_rounds": int, "num_groups": int,
+                  "overlap_efficiency": numbers.Real,
+                  "total_wire_s": numbers.Real,
+                  "exposed_wire_s": numbers.Real,
+                  "exposed_wire_bytes": int}, f"{w}.overlap")
+    _require(ovl["overlap_efficiency"] > 0, f"{w}.overlap",
+             "staged exchange hides no wire (overlap_efficiency == 0)")
+    _require(ovl["exposed_wire_s"] < ovl["total_wire_s"], f"{w}.overlap",
+             "exposed wire not strictly inside the total scheduled wire")
+    _require(ovl["exposed_wire_bytes"] <= pk["wire_bytes"], f"{w}.overlap",
+             "exposed wire bytes above the scheduled wire volume")
+    rf = pk["roofline"]
+    _fields(rf, {"compute_s": numbers.Real, "memory_s": numbers.Real,
+                 "collective_s": numbers.Real,
+                 "collective_total_s": numbers.Real,
+                 "collective_exposed_bytes": numbers.Real, "dominant": str},
+            f"{w}.roofline")
+    _require(rf["collective_s"] <= rf["collective_total_s"], f"{w}.roofline",
+             "overlap-aware collective term above the total-wire pricing")
 
 
 CHECKS = {

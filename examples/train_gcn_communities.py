@@ -55,6 +55,14 @@ def main():
                     help="store the ELL adjacency blocks in bf16 (half the "
                          "resident bytes; aggregation still accumulates "
                          "f32) — requires --compressed")
+    ap.add_argument("--packed", action="store_true",
+                    help="store Z/U/z0 as packed Σ-bucket-rows planes "
+                         "(docs/layout.md) — requires --compressed and the "
+                         "p2p transport; bitwise-equal iterates, fewer "
+                         "resident rows on skewed graphs")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffer the p2p rounds against the ELL "
+                         "aggregation (requires --packed)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -79,7 +87,8 @@ def main():
                                   transport=args.transport,
                                   part=part, partitioner=args.partitioner,
                                   pad_mode=args.pad_mode,
-                                  adjacency_bf16=args.adjacency_bf16)
+                                  adjacency_bf16=args.adjacency_bf16,
+                                  packed=args.packed, overlap=args.overlap)
     print(f"mesh: {dict(trainer.mesh.shape)}; neighbour topology:\n"
           f"{np.asarray(trainer.data.neighbor_mask).astype(int)}")
     cs = trainer.comm_stats
@@ -104,6 +113,18 @@ def main():
     print(f"adjacency on device [{mode}]: {adj['resident_bytes'] / 1e6:.2f} "
           f"MB (dense would be {adj['dense_bytes'] / 1e6:.2f} MB, "
           f"max_deg {adj['max_deg']})")
+    st = cs["state"]
+    print(f"resident state [{'packed' if st['packed'] else 'strided'}]: "
+          f"{st['rows']} rows / {st['resident_bytes'] / 1e6:.2f} MB "
+          f"(strided {st['strided_rows']} rows / "
+          f"{st['strided_equiv_bytes'] / 1e6:.2f} MB, Σ-bucket floor "
+          f"{st['bucket_rows']} rows)")
+    if "overlap" in cs and cs["overlap"]["enabled"]:
+        ov = cs["overlap"]
+        print(f"overlap: {100 * ov['overlap_efficiency']:.2f}% of "
+              f"{cs['wire_bytes'] / 1e6:.2f} MB wire hidden across "
+              f"{ov['num_groups']} arrival groups "
+              f"({ov['num_rounds']} rounds)")
 
     log = trainer.train(args.epochs, verbose=False)
     stride = max(1, args.epochs // 10)

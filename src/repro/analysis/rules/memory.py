@@ -53,6 +53,45 @@ def no_dense_adjacency(ctx: AnalysisContext) -> Iterable[Finding]:
                          "computation": comp.name})
 
 
+@rule("memory/packed-resident-state")
+def packed_resident_state(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Under packed state (``ParallelADMMTrainer(packed=True)`` on a
+    multi-shard p2p mesh) the per-shard program never materialises a
+    blocked row stack taller than the receive buffer: any computed
+    (rows, n_pad, C) intermediate with ``rows > r_pad`` is a strided
+    (M, n_pad, C)-shaped payload sneaking back in — exactly what the
+    packed plane exists to retire."""
+    exp = ctx.expectations
+    n_pad = exp.get("n_pad")
+    if ctx.hlo_text is None or not n_pad:
+        return
+    if not exp.get("state_packed"):
+        return
+    bound = int(exp.get("packed_rows_bound", 0))
+    if bound <= 0:
+        return
+    for comp, ins in ctx.instructions():
+        dims = ins.result_dims
+        # blocked row stacks only: (rows, n_pad, C) with a feature-like
+        # trailing dim (C == n_pad would be an adjacency block, which
+        # memory/no-dense-adjacency already bounds)
+        if len(dims) != 3 or dims[-2] != n_pad or dims[-1] == n_pad:
+            continue
+        if ins.op in ("parameter", "constant"):
+            continue
+        if dims[0] > bound:
+            yield Finding(
+                "memory/packed-resident-state", Severity.ERROR,
+                f"%{ins.name} ({ins.op}) materialises a ({dims[0]}, "
+                f"{n_pad}, {dims[-1]}) blocked row stack — taller than "
+                f"the r_pad={bound} receive view the packed layout "
+                f"allows per shard",
+                location=ins.name,
+                details={"shape": list(dims), "rows": dims[0],
+                         "packed_rows_bound": bound,
+                         "computation": comp.name})
+
+
 @rule("memory/hbm-intermediate-budget")
 def hbm_intermediate_budget(ctx: AnalysisContext) -> Iterable[Finding]:
     """No single intermediate exceeds ``hbm_intermediate_budget`` bytes."""

@@ -31,7 +31,7 @@ def _gathered_cs(cfg: Any) -> list[int]:
 def _kernel_entries(tr: Any, n_shards: int) -> list[dict]:
     """One ELL-kernel spec per shard, with that shard's scalar operands
     (localized indices under multi-shard p2p, global ids otherwise)."""
-    from repro.kernels.community_spmm import ell_spec
+    from repro.kernels.community_spmm import ell_packed_spec, ell_spec
 
     data = tr.data
     if data.ell_blocks is None:
@@ -40,6 +40,8 @@ def _kernel_entries(tr: Any, n_shards: int) -> list[dict]:
     k = m // n_shards
     idx = np.asarray(data.ell_indices)
     z_lanes = m
+    packed_wire = bool(getattr(tr, "packed", False)
+                       and n_shards > 1 and tr._plan is not None)
     if tr.transport == "p2p" and n_shards > 1 and tr._plan is not None:
         csr = tr.layout.compress()
         idx = tr._plan.localize_indices(csr.ell_indices, csr.ell_mask)
@@ -48,17 +50,29 @@ def _kernel_entries(tr: Any, n_shards: int) -> list[dict]:
     rows = np.asarray(data.row_counts)
     nbrs = np.asarray(data.nbr_counts)
     c = max(tr.cfg.layer_dims)
+    if packed_wire:
+        csr = tr.layout.compress()
+        off = np.asarray(tr._plan.localized_offsets(csr.ell_indices,
+                                                    csr.ell_mask))
+        off8 = np.where(msk != 0, off // 8, 0).astype(np.int32)
     entries = []
     for s in range(n_shards):
         sl = slice(s * k, (s + 1) * k)
-        spec = ell_spec(k, max_deg, n_pad, c, z_lanes,
-                        block_bytes=data.ell_blocks.dtype.itemsize,
-                        z_bytes=4)
-        entries.append({
-            "spec": spec,
-            "scalars": {"ell_indices": idx[sl], "ell_mask": msk[sl],
-                        "row_counts": rows[sl], "nbr_counts": nbrs[sl]},
-        })
+        if packed_wire:
+            # the packed trainer's aggregation reads the receive *plane*
+            # through 8-row offsets, not a strided (z_lanes, n_pad, C)
+            spec = ell_packed_spec(
+                k, max_deg, n_pad, c, tr._plan.recv_plane_rows,
+                block_bytes=data.ell_blocks.dtype.itemsize, z_bytes=4)
+            scalars = {"ell_offsets8": off8[sl], "ell_mask": msk[sl],
+                       "row_counts": rows[sl], "nbr_counts": nbrs[sl]}
+        else:
+            spec = ell_spec(k, max_deg, n_pad, c, z_lanes,
+                            block_bytes=data.ell_blocks.dtype.itemsize,
+                            z_bytes=4)
+            scalars = {"ell_indices": idx[sl], "ell_mask": msk[sl],
+                       "row_counts": rows[sl], "nbr_counts": nbrs[sl]}
+        entries.append({"spec": spec, "scalars": scalars})
     return entries
 
 
@@ -103,6 +117,14 @@ def trainer_expectations(tr: Any) -> dict[str, Any]:
         w_bytes = sum(int(np.prod(w.shape)) * w.dtype.itemsize
                       for w in tr.state.weights)
         exp["allreduce_max_bytes"] = 2 * w_bytes + 4096
+    # packed resident state: only meaningful when the packed plane actually
+    # feeds the wire (multi-shard p2p) — the 1-shard packed program keeps
+    # the well-tested blocked body
+    exp["state_packed"] = bool(getattr(tr, "packed", False)
+                               and tr.transport == "p2p" and n_shards > 1
+                               and tr._plan is not None)
+    if exp["state_packed"]:
+        exp["packed_rows_bound"] = int(tr._plan.r_pad)
     # largest legitimate resident buffers: the adjacency store, the full
     # Z/U state stack, and one gathered payload; anything 4x past their
     # max is a blow-up

@@ -410,6 +410,101 @@ def compress_blocks(a_blocks: Array, neighbor_mask: Array,
 
 
 @dataclasses.dataclass(frozen=True)
+class PackedDeviceLayout:
+    """Packed Σ-bucket-rows device layout for an ``n_shards`` mesh.
+
+    The strided device layout keeps community m at rows
+    ``[m·n_pad, (m+1)·n_pad)`` of an (M, n_pad, C) stack, so the single
+    largest community prices every resident Z/U/z0/label tensor.  The
+    packed layout instead gives shard s one flat ``(plane_rows, C)``
+    plane in which its k lanes sit back to back at their *bucket* row
+    counts: community m starts at ``local_offsets[m]`` and owns
+    ``row_counts[m]`` rows.  ``plane_rows`` is the max over shards of
+    Σ-bucket-rows (shard_map needs one static per-shard shape), so
+    resident bytes track true community size instead of ``M·n_pad``.
+
+    The index tables make the packed ↔ blocked conversion a single
+    static ``jnp.take(..., mode="fill", fill_value=0)`` each way —
+    out-of-range entries encode "pad row / unused plane row", and since
+    every trainer tensor is exactly zero beyond ``row_counts`` (the
+    zero-outside-counts contract), the round trip is lossless and the
+    blocked view is bitwise-identical to the strided layout's shard.
+    """
+
+    n_shards: int
+    lanes_per_shard: int
+    n_pad: int
+    plane_rows: int        # S: per-shard packed plane height (8-aligned)
+    row_counts: Array      # (M,) effective bucket rows per community
+    local_offsets: Array   # (M,) row offset of community m in its plane
+    shard_rows: Array      # (n_shards,) true packed rows per shard
+    unpack_rows: Array     # (n_shards, k·n_pad) plane row | S (pad -> fill)
+    pack_rows: Array       # (n_shards, S) blocked flat row | k·n_pad (fill)
+
+    @property
+    def num_parts(self) -> int:
+        return int(self.row_counts.shape[0])
+
+    @property
+    def total_rows(self) -> int:
+        """Rows of the full packed state stack (n_shards · plane_rows)."""
+        return self.n_shards * self.plane_rows
+
+    @property
+    def true_rows(self) -> int:
+        """Σ bucket rows — the ideal (non-shard-max) packed height."""
+        return int(self.row_counts.sum())
+
+    def state_rows(self, strided: bool = False) -> int:
+        """Leading-dim rows a state tensor holds under either layout."""
+        if strided:
+            return self.num_parts * self.n_pad
+        return self.total_rows
+
+    def global_unpack_rows(self) -> Array:
+        """(M·n_pad,) indices into the (total_rows,) packed stack; pad
+        rows map out of range (use ``mode='fill'``)."""
+        m, n, k = self.num_parts, self.n_pad, self.lanes_per_shard
+        out = np.full(m * n, self.total_rows, dtype=np.int32)
+        for c in range(m):
+            s, rc = c // k, int(self.row_counts[c])
+            base = s * self.plane_rows + int(self.local_offsets[c])
+            out[c * n: c * n + rc] = base + np.arange(rc)
+        return out
+
+    def global_pack_rows(self) -> Array:
+        """(total_rows,) indices into the (M·n_pad,) blocked stack;
+        unused plane rows map out of range (use ``mode='fill'``)."""
+        m, n, k = self.num_parts, self.n_pad, self.lanes_per_shard
+        out = np.full(self.total_rows, m * n, dtype=np.int32)
+        for c in range(m):
+            s, rc = c // k, int(self.row_counts[c])
+            base = s * self.plane_rows + int(self.local_offsets[c])
+            out[base: base + rc] = c * n + np.arange(rc)
+        return out
+
+    def pack_state(self, x: Array, fill: float = 0.0) -> Array:
+        """Host-side (M, n_pad, ...) blocked -> (total_rows, ...) packed."""
+        flat = np.asarray(x).reshape((self.num_parts * self.n_pad,)
+                                     + x.shape[2:])
+        idx = self.global_pack_rows()
+        out = np.full((self.total_rows,) + flat.shape[1:], fill, flat.dtype)
+        ok = idx < flat.shape[0]
+        out[ok] = flat[idx[ok]]
+        return out
+
+    def unpack_state(self, x: Array, fill: float = 0.0) -> Array:
+        """Host-side (total_rows, ...) packed -> (M, n_pad, ...) blocked."""
+        x = np.asarray(x)
+        idx = self.global_unpack_rows()
+        out = np.full((self.num_parts * self.n_pad,) + x.shape[1:], fill,
+                      x.dtype)
+        ok = idx < x.shape[0]
+        out[ok] = x[idx[ok]]
+        return out.reshape((self.num_parts, self.n_pad) + x.shape[1:])
+
+
+@dataclasses.dataclass(frozen=True)
 class CommunityLayout:
     """Community-blocked layout of a graph (paper §2, Fig. 1).
 
@@ -505,6 +600,38 @@ class CommunityLayout:
                                 m * self.n_pad + int(self.sizes[m])]
             out[members] = x[offs[m]: offs[m] + int(self.sizes[m])]
         return out
+
+    def device_layout(self, n_shards: int) -> PackedDeviceLayout:
+        """Packed Σ-bucket-rows device layout for an ``n_shards`` mesh.
+
+        Shard s (lanes [s·k, (s+1)·k)) packs its communities back to back
+        at their bucket row counts; the per-shard plane height is the max
+        over shards (fixed shard_map shapes).  Under ``pad_mode="global"``
+        every bucket is ``n_pad`` so packed degenerates to strided — the
+        memory win needs bucketed counts and k > 1.
+        """
+        m, n = self.num_parts, self.n_pad
+        if n_shards <= 0 or m % n_shards:
+            raise ValueError(f"M={m} not divisible by n_shards={n_shards}")
+        k = m // n_shards
+        rc = self.eff_row_counts().astype(np.int32)
+        shard_rows = rc.reshape(n_shards, k).sum(axis=1).astype(np.int32)
+        plane = max(int(shard_rows.max()), 8)
+        local = np.zeros(m, dtype=np.int32)
+        for s in range(n_shards):
+            local[s * k:(s + 1) * k] = np.concatenate(
+                [[0], np.cumsum(rc[s * k:(s + 1) * k])[:-1]])
+        unpack = np.full((n_shards, k * n), plane, dtype=np.int32)
+        packr = np.full((n_shards, plane), k * n, dtype=np.int32)
+        for c in range(m):
+            s, i, cnt = c // k, c % k, int(rc[c])
+            rows = np.arange(cnt)
+            unpack[s, i * n: i * n + cnt] = int(local[c]) + rows
+            packr[s, int(local[c]): int(local[c]) + cnt] = i * n + rows
+        return PackedDeviceLayout(
+            n_shards=n_shards, lanes_per_shard=k, n_pad=n,
+            plane_rows=plane, row_counts=rc, local_offsets=local,
+            shard_rows=shard_rows, unpack_rows=unpack, pack_rows=packr)
 
     def pack(self, x: Array, fill: float = 0.0) -> Array:
         """(N, ...) node array -> (M, n_pad, ...) community-blocked array."""

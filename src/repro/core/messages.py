@@ -185,12 +185,16 @@ class ExchangeRound:
     written from the same ordered row list, so row t on the source lines up
     with row t on the destination.
     """
-    offset: int                      # ring offset (dst - src) mod n_shards
+    offset: int                      # colour id of the round (edge colouring)
     pairs: tuple[tuple[int, int], ...]
     rows_pad: int                    # padded node rows per participating shard
     send_idx: np.ndarray             # (n_shards, rows_pad) int32 flat rows
     recv_slot: np.ndarray            # (n_shards, rows_pad) int32; OOB=drop
     true_rows: int                   # Σ real node rows over pairs (no padding)
+    # packed-plane twins (plans built with row_counts): rows into the local
+    # (plane_rows, C) state plane / the (recv_plane_rows, C) receive plane
+    send_rows_packed: "np.ndarray | None" = None
+    recv_rows_packed: "np.ndarray | None" = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,10 +230,26 @@ class NeighborExchange:
     rounds: tuple[ExchangeRound, ...]
     sizes: tuple[int, ...] = ()      # per community wired rows (n_pad if not
     row_exact: bool = False          # row-exact)
+    # packed-plane metadata (plans built with row_counts): the send side is
+    # the shard's (plane_rows, C) state plane (PackedDeviceLayout); the
+    # receive side a (recv_plane_rows, C) plane with slot j's community at
+    # recv_offsets[s, j] for row_counts[gid] bucket rows
+    row_counts: tuple[int, ...] = ()
+    plane_rows: int = 0
+    recv_plane_rows: int = 0
+    local_offsets: "np.ndarray | None" = None   # (M,) row in the home plane
+    recv_offsets: "np.ndarray | None" = None    # (n_shards, r_pad); OOB=unused
+    own_copy_rows: "np.ndarray | None" = None   # (n_shards, recv_plane_rows)
+    recv_unpack_rows: "np.ndarray | None" = None  # (n_shards, r_pad·n_pad)
 
     @property
     def num_rounds(self) -> int:
         return len(self.rounds)
+
+    @property
+    def packed(self) -> bool:
+        """True when the plan carries packed-plane routing tables."""
+        return self.recv_offsets is not None
 
     def slot_of(self, shard: int) -> dict[int, int]:
         """global community id -> receive-buffer slot on ``shard``."""
@@ -256,10 +276,36 @@ class NeighborExchange:
                 out[m, d] = slots[int(idx[m, d])]
         return out
 
+    def localized_offsets(self, ell_indices: np.ndarray,
+                          ell_mask: np.ndarray) -> np.ndarray:
+        """Receive-plane *row offsets* of every ELL neighbour slot.
+
+        The packed twin of ``localize_indices``: instead of a buffer slot
+        (a multiple-of-``n_pad`` stride), each masked-in (m, d) entry maps
+        to the first receive-plane row of its neighbour's bucket —
+        ``recv_offsets[shard(m), slot]`` — which is what the offset-indexed
+        ELL kernel scalar-prefetches to steer its Z DMA.  Masked-out
+        entries map to row 0 (in range, multiplied away by the mask).
+        """
+        if self.recv_offsets is None:
+            raise ValueError("plan built without row_counts has no packed "
+                             "receive plane — pass row_counts to "
+                             "build_neighbor_exchange")
+        loc = self.localize_indices(ell_indices, ell_mask)
+        msk = np.asarray(ell_mask) > 0
+        k = self.lanes_per_shard
+        out = np.zeros_like(loc, dtype=np.int32)
+        for m in range(loc.shape[0]):
+            offs = self.recv_offsets[m // k]
+            for d in np.flatnonzero(msk[m]):
+                out[m, d] = offs[loc[m, d]]
+        return out
+
 
 def build_neighbor_exchange(neighbor_mask: np.ndarray, n_shards: int,
                             n_pad: int,
-                            sizes: np.ndarray | None = None
+                            sizes: np.ndarray | None = None,
+                            row_counts: np.ndarray | None = None
                             ) -> NeighborExchange:
     """Construct the static round schedule for a community topology.
 
@@ -267,6 +313,15 @@ def build_neighbor_exchange(neighbor_mask: np.ndarray, n_shards: int,
     row-exact packing: each cross-shard message carries only the true node
     rows of its communities.  Without it every community wires all
     ``n_pad`` rows — byte-identical to the historic whole-block schedule.
+
+    ``row_counts`` (optional, (M,) bucket rows per community,
+    ``CommunityLayout.eff_row_counts``) additionally equips the plan with
+    *packed-plane* routing tables: send rows index the shard's packed
+    Σ-bucket-rows state plane (``PackedDeviceLayout``) and receive rows a
+    packed receive plane with one bucket per needed slot, so a packed
+    trainer never materialises a strided ``(r_pad, n_pad, C)`` buffer on
+    the wire path.  The wired rows themselves are unchanged — packed and
+    strided plans schedule byte-identical rounds.
     """
     from repro.core.graph import shard_neighbor_graph
     from repro.sharding.partition import ring_round_coloring
@@ -282,6 +337,47 @@ def build_neighbor_exchange(neighbor_mask: np.ndarray, n_shards: int,
         raise ValueError(f"sizes must be (M,) in [0, n_pad={n_pad}]")
     r_pad = max(len(ids) for ids in needed)
     slot_of = [{int(r): i for i, r in enumerate(ids)} for ids in needed]
+
+    packed = row_counts is not None
+    if packed:
+        rc = np.asarray(row_counts, dtype=np.int64)
+        if rc.shape != (m,) or (rc > n_pad).any() or (rc < wired).any():
+            raise ValueError("row_counts must be (M,) in [wired rows, "
+                             f"n_pad={n_pad}] — buckets cover what is wired")
+        local_offsets = np.zeros(m, dtype=np.int32)
+        for s in range(n_shards):
+            local_offsets[s * k:(s + 1) * k] = np.concatenate(
+                [[0], np.cumsum(rc[s * k:(s + 1) * k])[:-1]])
+        plane_rows = max(int(rc.reshape(n_shards, k).sum(axis=1).max()), 8)
+        recv_offsets = np.full((n_shards, r_pad), 0, dtype=np.int32)
+        recv_rows = np.zeros(n_shards, dtype=np.int64)
+        for s in range(n_shards):
+            cnts = [int(rc[g]) for g in needed[s]]
+            offs = np.concatenate([[0], np.cumsum(cnts)]).astype(np.int32)
+            recv_offsets[s, :len(cnts)] = offs[:-1]
+            recv_rows[s] = offs[-1]
+        recv_plane_rows = max(int(recv_rows.max()), 8)
+        # unused trailing slots point one past the plane (drop/fill)
+        for s in range(n_shards):
+            recv_offsets[s, len(needed[s]):] = recv_plane_rows
+        own_copy_rows = np.full((n_shards, recv_plane_rows), plane_rows,
+                                dtype=np.int32)
+        recv_unpack = np.full((n_shards, r_pad * n_pad), recv_plane_rows,
+                              dtype=np.int32)
+        for s in range(n_shards):
+            for slot, gid in enumerate(needed[s]):
+                cnt = int(rc[gid])
+                rows = np.arange(cnt)
+                recv_unpack[s, slot * n_pad: slot * n_pad + cnt] = \
+                    recv_offsets[s, slot] + rows
+                if gid // k == s:           # resident lane: local plane copy
+                    own_copy_rows[s, recv_offsets[s, slot]:
+                                  recv_offsets[s, slot] + cnt] = \
+                        local_offsets[gid] + rows
+    else:
+        rc = None
+        local_offsets = recv_offsets = own_copy_rows = recv_unpack = None
+        plane_rows = recv_plane_rows = 0
 
     own_slots = np.zeros((n_shards, k), dtype=np.int32)
     for s in range(n_shards):
@@ -336,6 +432,10 @@ def build_neighbor_exchange(neighbor_mask: np.ndarray, n_shards: int,
             send_idx = np.zeros((n_shards, rows_pad), dtype=np.int32)
             recv_slot = np.full((n_shards, rows_pad), r_pad * n_pad,
                                 dtype=np.int32)
+            send_pk = np.zeros((n_shards, rows_pad), dtype=np.int32) \
+                if packed else None
+            recv_pk = np.full((n_shards, rows_pad), recv_plane_rows,
+                              dtype=np.int32) if packed else None
             for src, dst in grp:
                 t = 0
                 for r in msgs[(src, dst)]:
@@ -344,17 +444,28 @@ def build_neighbor_exchange(neighbor_mask: np.ndarray, n_shards: int,
                         (r - src * k) * n_pad + np.arange(rows)
                     recv_slot[dst, t:t + rows] = \
                         slot_of[dst][r] * n_pad + np.arange(rows)
+                    if packed:
+                        send_pk[src, t:t + rows] = \
+                            local_offsets[r] + np.arange(rows)
+                        recv_pk[dst, t:t + rows] = \
+                            recv_offsets[dst, slot_of[dst][r]] \
+                            + np.arange(rows)
                     t += rows
             rounds.append(ExchangeRound(
                 offset=offset, pairs=tuple(grp), rows_pad=rows_pad,
                 send_idx=send_idx, recv_slot=recv_slot,
-                true_rows=sum(msg_rows(p) for p in grp)))
+                true_rows=sum(msg_rows(p) for p in grp),
+                send_rows_packed=send_pk, recv_rows_packed=recv_pk))
 
     return NeighborExchange(
         n_shards=n_shards, lanes_per_shard=k, n_pad=n_pad, r_pad=r_pad,
         needed_ids=tuple(tuple(int(r) for r in ids) for ids in needed),
         own_slots=own_slots, rounds=tuple(rounds),
-        sizes=tuple(int(v) for v in wired), row_exact=row_exact)
+        sizes=tuple(int(v) for v in wired), row_exact=row_exact,
+        row_counts=tuple(int(v) for v in rc) if packed else (),
+        plane_rows=plane_rows, recv_plane_rows=recv_plane_rows,
+        local_offsets=local_offsets, recv_offsets=recv_offsets,
+        own_copy_rows=own_copy_rows, recv_unpack_rows=recv_unpack)
 
 
 def bf16_wire(collective: Callable[[Array], Array],
@@ -415,6 +526,141 @@ def exchange_neighbors(plan: NeighborExchange, x_loc: Array, axis: str,
         buf = buf.at[jnp.asarray(rnd.recv_slot)[sid]].set(payload,
                                                           mode="drop")
     return buf.reshape((plan.r_pad, n) + feat)
+
+
+def exchange_neighbors_packed(plan: NeighborExchange, x_plane: Array,
+                              axis: str, comm_bf16: bool = False,
+                              staged: bool = False):
+    """Run the plan on the packed state plane inside ``shard_map``.
+
+    ``x_plane``: (plane_rows, C) — this shard's packed Σ-bucket-rows
+    state (``PackedDeviceLayout``).  Returns the packed receive plane
+    ``(recv_plane_rows, C)``: slot j's bucket rows live at
+    ``recv_offsets[s, j]``, own lanes copied locally, neighbour rows
+    arriving through the same ppermute rounds (same pairs, same payload
+    rows — byte-identical wire) as the strided ``exchange_neighbors``.
+
+    With ``staged=True`` the *incremental* buffer states are returned as
+    a list — ``[after own-copy, after round 0, ..., final]`` — so a
+    consumer can start aggregating the slots a round has already
+    delivered while later rounds are still on the wire (the
+    double-buffered overlap schedule; see ``arrival_rounds``).
+    """
+    if plan.recv_offsets is None:
+        raise ValueError("plan built without row_counts cannot route the "
+                         "packed plane")
+    if plan.n_shards == 1:
+        # one shard hosts every community and the needed-ids slot order is
+        # the lane order, so the receive plane IS the local plane
+        return [x_plane] if staged else x_plane
+    sid = jax.lax.axis_index(axis)
+    own_tbl = jnp.asarray(plan.own_copy_rows)[sid]
+    buf = jnp.take(x_plane, own_tbl, axis=0, mode="fill", fill_value=0)
+    bufs = [buf]
+    for rnd in plan.rounds:
+        payload = x_plane[jnp.asarray(rnd.send_rows_packed)[sid]]
+        permute = partial(jax.lax.ppermute, axis_name=axis,
+                          perm=list(rnd.pairs))
+        payload = bf16_wire(permute, payload) if comm_bf16 \
+            else permute(payload)
+        buf = buf.at[jnp.asarray(rnd.recv_rows_packed)[sid]].set(
+            payload, mode="drop")
+        bufs.append(buf)
+    return bufs if staged else buf
+
+
+def arrival_rounds(plan: NeighborExchange) -> np.ndarray:
+    """(n_shards, r_pad) int32: index of the ppermute round that delivers
+    each receive slot's payload; -1 for resident own lanes (available
+    before any wire) and never-wired padding slots."""
+    arr = np.full((plan.n_shards, plan.r_pad), -1, dtype=np.int32)
+    limit = plan.r_pad * plan.n_pad
+    for ri, rnd in enumerate(plan.rounds):
+        for _, dst in rnd.pairs:
+            rows = rnd.recv_slot[dst]
+            slots = np.unique(rows[rows < limit] // plan.n_pad)
+            arr[dst, slots] = ri
+    return arr
+
+
+def overlap_stats(plan: NeighborExchange, neighbor_mask: np.ndarray,
+                  feature_dims: Sequence[int], itemsize: int = 4,
+                  enabled: bool = False,
+                  peak_flops: float | None = None,
+                  ici_bw: float | None = None) -> dict:
+    """Analytic exposed-vs-total wire time of the round schedule.
+
+    Models the double-buffered overlap the staged exchange enables: while
+    round r is on the wire, a shard can aggregate every ELL slot whose
+    payload is already resident (own lanes before round 0, round r' < r
+    arrivals after).  Per round, the exposed wire time is what the
+    available aggregation work cannot hide:
+
+        exposed_r = max(0, t_wire(r) − credit_r)
+
+    with ``credit`` the pipelined budget of hideable compute (unspent
+    credit carries forward; compute of slots arriving in the final round
+    runs after the wire and hides nothing).  Wire time prices each
+    round's per-pair payload over one ICI link; compute prices the
+    row-exact block-aggregation FLOPs (2·rc_m·rc_src·ΣC per consumed ELL
+    slot) at peak MXU throughput — both from ``repro.launch.mesh``, so
+    the metric is a deterministic property of the schedule, not a
+    wall-clock sample.  The worst shard's exposure is reported (SPMD
+    rounds advance at the slowest participant).
+
+    ``overlap_efficiency`` = hidden / total wire time ∈ [0, 1];
+    ``exposed_wire_bytes`` = exposed seconds × link bandwidth is what the
+    roofline prices instead of total wire bytes (``benchmarks/roofline``).
+    """
+    if peak_flops is None or ici_bw is None:
+        from repro.launch.mesh import ICI_BW, PEAK_FLOPS
+        peak_flops = PEAK_FLOPS if peak_flops is None else peak_flops
+        ici_bw = ICI_BW if ici_bw is None else ici_bw
+    nbr = np.asarray(neighbor_mask, bool)
+    m = nbr.shape[0]
+    k = plan.lanes_per_shard
+    rc = np.asarray(plan.row_counts, dtype=np.int64) if plan.row_counts \
+        else np.full(m, plan.n_pad, dtype=np.int64)
+    total_c = int(np.sum(list(feature_dims)))
+    n_gathers = len(list(feature_dims))
+    arr = arrival_rounds(plan)
+    t_wire = [r.rows_pad * total_c * itemsize / ici_bw for r in plan.rounds]
+    total = float(sum(t_wire))
+
+    # per-shard hideable compute per arrival group (seconds, all gathers)
+    worst_exposed = 0.0
+    for s in range(plan.n_shards):
+        slot_gid = plan.needed_ids[s]
+        group_flops = np.zeros(plan.num_rounds + 1)
+        for lane in range(s * k, (s + 1) * k):
+            for slot, gid in enumerate(slot_gid):
+                if not nbr[lane, gid]:
+                    continue
+                g = int(arr[s, slot]) + 1          # own lanes -> group 0
+                group_flops[g] += 2.0 * int(rc[lane]) * int(rc[gid]) \
+                    * total_c
+        credit = group_flops[0] / peak_flops
+        exposed = 0.0
+        for ri, tw in enumerate(t_wire):
+            hidden = min(tw, credit)
+            exposed += tw - hidden
+            credit += group_flops[ri + 1] / peak_flops - hidden
+        worst_exposed = max(worst_exposed, exposed)
+
+    eff = 1.0 - worst_exposed / total if total > 0 else 0.0
+    return {
+        "enabled": bool(enabled),
+        "num_rounds": plan.num_rounds,
+        "num_groups": plan.num_rounds + 1,
+        "total_wire_s": total,
+        "exposed_wire_s": worst_exposed,
+        "hidden_wire_s": total - worst_exposed,
+        "overlap_efficiency": eff,
+        "exposed_wire_bytes": int(worst_exposed * ici_bw),
+        "num_gathers": n_gathers,
+        "model": {"peak_flops": peak_flops, "ici_bw": ici_bw,
+                  "itemsize": itemsize},
+    }
 
 
 def exchange_bytes(plan: NeighborExchange, feature_dims: Sequence[int],

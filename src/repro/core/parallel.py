@@ -72,13 +72,37 @@ everything-pads-to-the-max behaviour; the iterates are identical either
 way (pad rows are zero throughout), only processed/wired volume changes.
 ``adjacency_bf16=True`` (compressed only) additionally stores the ELL
 block plane bf16 — half the resident adjacency bytes, f32 accumulation.
+
+Packed device state (``packed`` flag, requires compressed + p2p): the
+resident trainer state drops the (M, n_pad, …) stride entirely.  Z/U and
+the static z0/labels/masks live as Σ-bucket-rows planes — each shard
+holds a ``(plane_rows, C)`` plane of its lanes' bucket rows back to back
+(graph.PackedDeviceLayout), so resident state bytes track the bucketed
+community sizes, not M × the largest community.  The exchange runs on
+the packed plane (messages.exchange_neighbors_packed — same ppermute
+rounds, byte-identical wire) into a packed receive plane, and the ELL
+aggregation reads it through scalar-prefetched row offsets
+(kernels community_spmm_ell_packed / NeighborExchange.localized_offsets)
+instead of an n_pad stride.  Subproblem math runs on blocked per-lane
+views rebuilt with static take-with-fill tables — pad rows are zero
+throughout (the zero-outside-counts contract), so packed iterates are
+*bitwise* equal to the strided path's.  ``overlap=True`` (packed only)
+additionally splits each exchange into its round-indexed buffer stages
+and aggregates each arrival group as soon as its rounds are in
+(double-buffering wire behind compute; the sum association changes, so
+overlap parity is tolerance- rather than bit-level), and ``comm_stats``
+gains an analytic overlap-efficiency metric (messages.overlap_stats)
+the roofline prices exposed wire with.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import NamedTuple
+from typing import TYPE_CHECKING, NamedTuple
+
+if TYPE_CHECKING:
+    from repro.core.serial import TrainLog
 
 import jax
 import jax.numpy as jnp
@@ -95,9 +119,13 @@ AXIS = "comm"
 
 
 class ParallelState(NamedTuple):
+    """Trainer iterates.  Strided layout: zs[l] is (M, n_pad, C_l) and u
+    (M, n_pad, C_L), sharded over comm.  Packed layout: zs[l] is the
+    (n_shards · plane_rows, C_l) Σ-bucket-rows plane (u likewise) —
+    shard s's slice holds its lanes' bucket rows back to back."""
     weights: tuple[Array, ...]   # replicated
-    zs: tuple[Array, ...]        # (M, n_pad, C_l), sharded over comm
-    u: Array                     # (M, n_pad, C_L), sharded
+    zs: tuple[Array, ...]        # sharded over comm
+    u: Array                     # sharded
     taus: tuple[Array, ...]      # scalars, replicated
     thetas: tuple[Array, ...]    # (M,), sharded
 
@@ -121,12 +149,18 @@ class CommunityData:
     off; ``row_mask`` masks packed (M, n_pad) tensors down to true rows
     (metrics / Lagrangian).  Under the global pad scheme the counts are
     simply n_pad everywhere.
+
+    With ``packed_layout`` set (graph.PackedDeviceLayout), z0 / labels /
+    train_mask / test_mask are stored as Σ-bucket-rows planes —
+    (n_shards · plane_rows, …) instead of (M, n_pad, …) — matching the
+    packed trainer state; ``row_mask`` stays blocked (it only feeds the
+    host-jit metrics, which unpack the planes anyway).
     """
     a_blocks: "Array | None"   # (M, M, n_pad, n_pad) — dense mode only
-    z0: Array            # (M, n_pad, C0)
-    labels: Array        # (M, n_pad) int32
-    train_mask: Array    # (M, n_pad) float32
-    test_mask: Array     # (M, n_pad) float32
+    z0: Array            # (M, n_pad, C0) | packed (total_rows, C0)
+    labels: Array        # (M, n_pad) int32 | packed (total_rows,)
+    train_mask: Array    # (M, n_pad) f32 | packed (total_rows,)
+    test_mask: Array     # (M, n_pad) f32 | packed (total_rows,)
     neighbor_mask: Array  # (M, M) bool
     denom: Array         # scalar — global labeled-node count
     row_mask: Array       # (M, n_pad) float32 — 1 = true node row
@@ -136,10 +170,15 @@ class CommunityData:
     ell_mask: "Array | None" = None      # (M, max_deg) float32
     row_counts: "Array | None" = None    # (M,) int32
     nbr_counts: "Array | None" = None    # (M, max_deg) int32
+    packed_layout: "graph.PackedDeviceLayout | None" = None
 
     @property
     def compressed(self) -> bool:
         return self.a_blocks is None
+
+    @property
+    def packed(self) -> bool:
+        return self.packed_layout is not None
 
     @property
     def adjacency_bf16(self) -> bool:
@@ -148,6 +187,8 @@ class CommunityData:
 
     @property
     def num_parts(self) -> int:
+        if self.packed_layout is not None:
+            return self.packed_layout.num_parts
         return int(self.z0.shape[0])
 
     @property
@@ -161,10 +202,15 @@ class CommunityData:
 
 def community_data(g: graph.Graph, layout: graph.CommunityLayout,
                    compressed: bool = False,
-                   adjacency_bf16: bool = False) -> CommunityData:
+                   adjacency_bf16: bool = False,
+                   device_layout: "graph.PackedDeviceLayout | None" = None
+                   ) -> CommunityData:
     if adjacency_bf16 and not compressed:
         raise ValueError("adjacency_bf16=True requires compressed=True — "
                          "only the ELL block store has a bf16 path")
+    if device_layout is not None and not compressed:
+        raise ValueError("packed device state requires compressed=True — "
+                         "the dense block tensor keeps the n_pad stride")
     if compressed:
         csr = layout.compress()
         rows, nbrs = csr.ell_row_counts()
@@ -177,14 +223,23 @@ def community_data(g: graph.Graph, layout: graph.CommunityLayout,
                "nbr_counts": jnp.asarray(nbrs)}
     else:
         adj = {"a_blocks": jnp.asarray(layout.a_blocks)}
+    if device_layout is not None:
+        # Σ-bucket-rows planes: pad rows outside the bucket counts are
+        # zero by the layout contract, so pack is lossless
+        def dev(x):
+            return np.asarray(device_layout.pack_state(layout.pack(x)))
+    else:
+        def dev(x):
+            return layout.pack(x)
     return CommunityData(
-        z0=jnp.asarray(layout.pack(g.features)),
-        labels=jnp.asarray(layout.pack(g.labels.astype(np.int32))),
-        train_mask=jnp.asarray(layout.pack(g.train_mask.astype(np.float32))),
-        test_mask=jnp.asarray(layout.pack(g.test_mask.astype(np.float32))),
+        z0=jnp.asarray(dev(g.features)),
+        labels=jnp.asarray(dev(g.labels.astype(np.int32))),
+        train_mask=jnp.asarray(dev(g.train_mask.astype(np.float32))),
+        test_mask=jnp.asarray(dev(g.test_mask.astype(np.float32))),
         neighbor_mask=jnp.asarray(layout.neighbor_mask),
         denom=jnp.asarray(float(g.train_mask.sum())),
         row_mask=jnp.asarray(layout.node_mask.astype(np.float32)),
+        packed_layout=device_layout,
         **adj,
     )
 
@@ -317,6 +372,7 @@ def fista_lanes(admm: ADMMConfig, b, u, labels, mask, z_init, denom):
 def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                     comm_bf16: bool, compressed: bool,
                     plan: "messages.NeighborExchange | None",
+                    overlap: bool, packed_aux: "dict | None",
                     adj, nbr_row, z0_loc, labels_loc, mask_loc, denom,
                     ws, zs_loc, u_loc, taus, thetas):
     """Shapes per shard: nbr_row (k,M); z*_loc (k,n,C); thetas[l] (k,).
@@ -330,6 +386,21 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     (M,n,C) payload); a NeighborExchange means neighbour-only ppermute
     rounds (ell_idx is pre-remapped to slots of the (r_pad,n,C) receive
     buffer, and no (M,n,C) tensor exists in this body).
+
+    ``packed_aux`` (packed state mode) is a dict of *static* host tables:
+    z*_loc/u_loc arrive as this shard's Σ-bucket-rows planes, are
+    rebuilt into the blocked views above via take-with-fill (bitwise
+    lossless under the zero-outside-counts contract), and the updated
+    Z/U are re-packed on exit.  With a plan, the exchange itself runs on
+    the packed plane and the ELL aggregation reads the packed receive
+    plane through per-slot row offsets; ``overlap`` further splits the
+    aggregation by arrival round so each group's compute can overlap the
+    later ppermute rounds.
+
+    Every ``gather`` returns an ``(agg, blk)`` pair: ``agg`` feeds
+    ``rowagg`` (the packed plane / its staged snapshots in packed mode)
+    and ``blk`` is the blocked row view every other consumer indexes.
+    Outside packed mode both elements are the same buffer.
     """
     f = gcn.activation_fn(cfg.activation)
     num_layers = cfg.num_layers
@@ -339,20 +410,41 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     # whose payload rows any local subproblem reads
     shard_nbr = jnp.max(nbrf, axis=0)            # (M,)
 
+    packed_wire = packed_aux is not None and plan is not None
+    if packed_aux is not None:
+        sid0 = jax.lax.axis_index(AXIS)
+        kk, npd = packed_aux["k"], packed_aux["n"]
+        unp_tbl = jnp.asarray(packed_aux["unpack"])[sid0]    # (k·n,)
+        pk_tbl = jnp.asarray(packed_aux["pack"])[sid0]       # (plane_rows,)
+
+        def from_plane(p):
+            flat = jnp.take(p, unp_tbl, axis=0, mode="fill", fill_value=0)
+            return flat.reshape((kk, npd) + p.shape[1:])
+
+        def to_plane(blk):
+            flat = blk.reshape((kk * npd,) + blk.shape[2:])
+            return jnp.take(flat, pk_tbl, axis=0, mode="fill", fill_value=0)
+
+        z0_loc = from_plane(z0_loc)
+        labels_loc = from_plane(labels_loc)
+        mask_loc = from_plane(mask_loc)
+        zs_loc = tuple(from_plane(z) for z in zs_loc)
+        u_loc = from_plane(u_loc)
+
     if compressed:
         ell_rows, ell_idx, ell_msk, ell_rcnt, ell_ncnt = adj
         ell_f = ell_msk.astype(jnp.float32)      # (k, max_deg)
         if use_kernel:
             from repro.kernels import ops as kops
 
-            def rowagg(zh):
+            def agg_blocked(zh):
                 # scalar-prefetched indices steer the Z-block DMA; padding
                 # slots skip via @pl.when and the row-count guards drop pad
                 # rows of ragged (bucketed) layouts: work ∝ true block rows
                 return kops.community_spmm_ell(ell_rows, ell_idx, ell_msk,
                                                zh, ell_rcnt, ell_ncnt)
         else:
-            def rowagg(zh):              # Σ_{d} Ã[m,d] Z[idx[m,d]] per lane
+            def agg_blocked(zh):         # Σ_{d} Ã[m,d] Z[idx[m,d]] per lane
                 zg = zh[ell_idx] * ell_f[..., None, None]
                 return jnp.einsum("kdip,kdpc->kic",
                                   ell_rows.astype(jnp.float32),
@@ -361,26 +453,87 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
         a_row = adj
         from repro.kernels import ops as kops
 
-        def rowagg(zh):
+        def agg_blocked(zh):
             # per-lane neighbour rows engage the kernel's @pl.when block
             # skipping: work ∝ nnz blocks, not M²
             return kops.community_spmm(a_row, zh, nbr_row)
     else:
         a_row = adj
 
-        def rowagg(zh):                  # Σ_{r∈N_m} Ã_{m,r} Z_r per lane
+        def agg_blocked(zh):             # Σ_{r∈N_m} Ã_{m,r} Z_r per lane
             return jnp.einsum("kmip,mpc->kic",
                               a_row * nbrf[:, :, None, None], zh)
 
-    if plan is not None:
+    if packed_wire:
+        off_lanes = jnp.asarray(packed_aux["offsets"])[sid0]   # (k, D)
+        lane_n = jnp.arange(npd)
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            def agg_plane(plane, msk):
+                # offset-indexed kernel: the Z DMA reads the packed
+                # receive plane at the scalar-prefetched slot offsets
+                return kops.community_spmm_ell_packed(
+                    ell_rows, off_lanes, msk, plane, ell_rcnt, ell_ncnt)
+        else:
+            def agg_plane(plane, msk):
+                rows = off_lanes[..., None] + lane_n[None, None, :]
+                valid = (lane_n[None, None, :] < ell_ncnt[..., None]) \
+                    & (msk[..., None] != 0)
+                rows = jnp.where(valid, rows, plane.shape[0])
+                zg = jnp.take(plane, rows.reshape(-1), axis=0,
+                              mode="fill", fill_value=0)
+                zg = zg.reshape(rows.shape + plane.shape[1:])
+                return jnp.einsum("kdip,kdpc->kic",
+                                  ell_rows.astype(jnp.float32),
+                                  zg.astype(jnp.float32))
+
+        if overlap:
+            grp_lanes = jnp.asarray(packed_aux["groups"])[sid0]  # (k, D)
+
+            def rowagg(x):
+                # double-buffered schedule: stage g of the exchange holds
+                # everything rounds < g delivered, so group g's partial
+                # aggregation depends on no later ppermute — XLA is free
+                # to run it while those rounds are still on the wire
+                stages = x[0]
+                acc = agg_plane(stages[0], ell_f * (grp_lanes == 0))
+                for gi in range(1, len(stages)):
+                    acc = acc + agg_plane(stages[gi],
+                                          ell_f * (grp_lanes == gi))
+                return acc
+        else:
+            def rowagg(x):
+                return agg_plane(x[0], ell_f)
+    else:
+        def rowagg(x):
+            return agg_blocked(x[0])
+
+    if packed_wire:
+        ru_tbl = jnp.asarray(packed_aux["recv_unpack"])[sid0]  # (r_pad·n,)
+
+        def gather(x_loc):
+            """packed p2p: pack the blocked local rows onto this shard's
+            plane, run the ppermute schedule on packed row payloads
+            (byte-identical wire to the strided plan), and rebuild the
+            (r_pad, n, C) blocked view for the row-indexed consumers."""
+            plane = to_plane(x_loc)
+            res = messages.exchange_neighbors_packed(
+                plan, plane, AXIS, comm_bf16=comm_bf16, staged=overlap)
+            buf = res[-1] if overlap else res
+            flat = jnp.take(buf, ru_tbl, axis=0, mode="fill", fill_value=0)
+            blk = flat.reshape((plan.r_pad, npd) + x_loc.shape[2:])
+            return (res, blk)
+    elif plan is not None:
         def gather(x_loc):
             """p2p transport: (k, n, C) local -> (r_pad, n, C) neighbour
             receive buffer via the static ppermute round schedule.  Only
             the rows this shard's subproblems read ever hit the wire (plus
             round padding); consumers index the buffer through the
             pre-localized ELL slots."""
-            return messages.exchange_neighbors(plan, x_loc, AXIS,
-                                               comm_bf16=comm_bf16)
+            buf = messages.exchange_neighbors(plan, x_loc, AXIS,
+                                              comm_bf16=comm_bf16)
+            return (buf, buf)
     else:
         def gather(x_loc):
             """allgather transport: (k, n, C) local -> (M, n, C) global
@@ -397,7 +550,8 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
             g = messages.bf16_wire(gather_all, x_loc) if comm_bf16 \
                 else gather_all(x_loc)               # (n_shards, k, n, C)
             g = g.reshape((m_total,) + x_loc.shape[1:])
-            return g * shard_nbr[:, None, None].astype(dt)
+            g = g * shard_nbr[:, None, None].astype(dt)
+            return (g, g)
 
     # gathered k-th iterates — one communication round per ADMM iteration.
     # Z_0 is static input: gather it exactly once per step and reuse it for
@@ -431,7 +585,7 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
         target1 = f(rowagg(zh_in[l - 1]) @ w_l)              # (k, n, C_l)
         # relay aggregates q_{l,r} (eq. 4 second-order payload), all r
         q_loc = rowagg(zh[l - 1]) @ w_next                   # (k, n, C_next)
-        q_all = gather(q_loc)                                # (M, n, C_next)
+        q_all = gather(q_loc)[1]                             # blocked rows
         z_ref = zs_loc[l - 1]
 
         # Coupling term of ψ (paper eq. 5/6): every neighbour community r's
@@ -468,7 +622,7 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                 return x_all[None]                           # (1, M, n, C)
 
         if l + 1 < num_layers:
-            zh_next = zh[l]
+            zh_next = zh[l][1]
 
             def obj_lanes(z, target1=target1, pre_nbr=pre_nbr,
                           zh_next=zh_next):
@@ -478,7 +632,7 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                 v2 = 0.5 * admm.nu * jnp.sum(r2 * r2, axis=(1, 2, 3))
                 return v1 + v2
         else:
-            zh_last, uh = zh[l], gather(u_loc)
+            zh_last, uh = zh[l][1], gather(u_loc)[1]
 
             def obj_lanes(z, target1=target1, pre_nbr=pre_nbr,
                           zh_last=zh_last, uh=uh):
@@ -507,6 +661,12 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     b_new = rowagg(zh_pen_new) @ new_ws[-1]
     new_u = u_loc + admm.rho * (new_zs[-1] - b_new)
 
+    if packed_aux is not None:
+        # carry state between steps in the packed plane — the blocked
+        # (k, n, C) iterates never leave this body
+        new_zs = [to_plane(z) for z in new_zs]
+        new_u = to_plane(new_u)
+
     return (tuple(new_ws), tuple(new_zs), new_u,
             tuple(new_taus), tuple(new_thetas))
 
@@ -525,7 +685,9 @@ class ParallelADMMTrainer:
                  transport: str | None = None,
                  partitioner: str | None = None,
                  pad_mode: str = "bucketed",
-                 adjacency_bf16: bool = False):
+                 adjacency_bf16: bool = False,
+                 packed: bool = False,
+                 overlap: bool = False):
         self.cfg, self.admm, self.graph = cfg, admm, g
         self.compressed = compressed
         if transport is None:
@@ -537,6 +699,20 @@ class ParallelADMMTrainer:
             raise ValueError("transport='p2p' requires compressed=True — "
                              "the dense Z-coupling reads all M payload rows")
         self.transport = transport
+        if packed and not compressed:
+            raise ValueError("packed=True requires compressed=True — the "
+                             "packed plane is only routed through ELL "
+                             "offsets, never a dense Z-coupling")
+        if packed and transport != "p2p":
+            raise ValueError("packed=True requires transport='p2p' — the "
+                             "plane layout exists to feed the row-exact "
+                             "exchange; an all-gather would re-materialise "
+                             "the strided (M, n_pad, C) payload")
+        if overlap and not packed:
+            raise ValueError("overlap=True requires packed=True — the "
+                             "staged exchange snapshots are packed planes")
+        self.packed = packed
+        self.overlap = overlap
         if pad_mode not in ("global", "bucketed"):
             raise ValueError(f"unknown pad_mode {pad_mode!r}; "
                              f"expected 'global' or 'bucketed'")
@@ -558,9 +734,7 @@ class ParallelADMMTrainer:
         self.layout = graph.build_community_layout(g.num_nodes, g.edges, part,
                                                    compressed=compressed,
                                                    pad_mode=pad_mode)
-        self.data = community_data(g, self.layout, compressed=compressed,
-                                   adjacency_bf16=adjacency_bf16)
-        m = self.data.num_parts
+        m = int(np.asarray(self.layout.neighbor_mask).shape[0])
 
         if mesh is None:
             n_dev = len(jax.devices())
@@ -568,29 +742,46 @@ class ParallelADMMTrainer:
             mesh = make_mesh((n_shards,), (AXIS,),
                              devices=jax.devices()[:n_shards])
         self.mesh = mesh
+        n_shards = mesh.shape[AXIS]
+
+        # packed state: each shard's Z/U/z0/label rows live back to back at
+        # their bucket row counts on a flat plane — resident bytes track
+        # true community size, not M·n_pad (docs/layout.md)
+        self.packed_layout = self.layout.device_layout(n_shards) \
+            if packed else None
+        self.data = community_data(g, self.layout, compressed=compressed,
+                                   adjacency_bf16=adjacency_bf16,
+                                   device_layout=self.packed_layout)
 
         # init from the same forward pass as the serial trainer
         ws = gcn.init_weights(cfg, jax.random.key(seed))
         a_full = graph.normalized_adjacency(g.num_nodes, g.edges)
         zs_full = gcn.forward(cfg, jnp.asarray(a_full),
                               jnp.asarray(g.features), ws)
-        zs = tuple(jnp.asarray(self.layout.pack(np.asarray(z)))
-                   for z in zs_full)
+        if packed:
+            dl = self.packed_layout
+            zs = tuple(jnp.asarray(dl.pack_state(
+                self.layout.pack(np.asarray(z)))) for z in zs_full)
+        else:
+            zs = tuple(jnp.asarray(self.layout.pack(np.asarray(z)))
+                       for z in zs_full)
         u = jnp.zeros_like(zs[-1])
         taus = tuple(jnp.asarray(admm.tau_init) for _ in ws)
         thetas = tuple(jnp.full((m,), admm.tau_init) for _ in zs)
         self.state = ParallelState(tuple(ws), zs, u, taus, thetas)
 
-        n_shards = mesh.shape[AXIS]
         self._plan = None
         ell_idx_dev = self.data.ell_indices
         if self.transport == "p2p":
             # bucketed layouts wire row-exact payloads: only each wired
             # community's true rows ever cross the wire; the global scheme
-            # keeps the historic whole-n_pad-block messages
+            # keeps the historic whole-n_pad-block messages.  Packed mode
+            # additionally threads bucket row_counts so the plan carries
+            # the plane routing tables (send/recv packed rows, offsets).
             self._plan = messages.build_neighbor_exchange(
                 self.layout.neighbor_mask, n_shards, self.layout.n_pad,
-                sizes=self.layout.sizes if pad_mode == "bucketed" else None)
+                sizes=self.layout.sizes if pad_mode == "bucketed" else None,
+                row_counts=self.layout.eff_row_counts() if packed else None)
             if n_shards == 1:
                 # one shard hosts every community: nothing ever crosses the
                 # wire, the transports are the same program (the all-gather
@@ -607,10 +798,47 @@ class ParallelADMMTrainer:
         else:
             body_plan = None
 
+        # static host tables for the packed body — captured in the partial
+        # and indexed in-body by axis_index, so the shard_map specs never
+        # see them (same pattern as the plan's send/recv tables)
+        overlap_on = bool(overlap and body_plan is not None)
+        packed_aux = None
+        if packed:
+            dl = self.packed_layout
+            packed_aux = {
+                "k": int(dl.lanes_per_shard),
+                "n": int(dl.n_pad),
+                "unpack": np.asarray(dl.unpack_rows),
+                "pack": np.asarray(dl.pack_rows),
+            }
+            if body_plan is not None:
+                csr = self.layout.compress()
+                packed_aux["recv_unpack"] = \
+                    np.asarray(self._plan.recv_unpack_rows)
+                packed_aux["offsets"] = np.asarray(
+                    self._plan.localized_offsets(
+                        csr.ell_indices, csr.ell_mask)).reshape(
+                    n_shards, dl.lanes_per_shard, -1)
+                if overlap_on:
+                    # ELL slot -> arrival group: 0 = resident own lanes
+                    # (aggregable before any wire), g = delivered by
+                    # ppermute round g-1
+                    arr = messages.arrival_rounds(self._plan)
+                    loc = np.asarray(self._plan.localize_indices(
+                        csr.ell_indices, csr.ell_mask)).reshape(
+                        n_shards, dl.lanes_per_shard, -1)
+                    msk = np.asarray(csr.ell_mask).reshape(
+                        n_shards, dl.lanes_per_shard, -1)
+                    grp = np.zeros_like(loc)
+                    for s in range(n_shards):
+                        grp[s] = np.where(msk[s] != 0,
+                                          arr[s][loc[s]] + 1, 0)
+                    packed_aux["groups"] = grp
+
         sharded, rep = P(AXIS), P()
         n_l = cfg.num_layers
         body = partial(_iteration_body, cfg, admm, use_kernel, comm_bf16,
-                       compressed, body_plan)
+                       compressed, body_plan, overlap_on, packed_aux)
         if compressed:
             # each shard carries only its lanes' ELL rows — no dense
             # (M, M, n_pad, n_pad) tensor exists on device — plus its
@@ -711,6 +939,35 @@ class ParallelADMMTrainer:
         self.comm_stats["adjacency"]["resident_bytes"] = \
             int(self.data.adjacency_nbytes)
 
+        # device-resident iterate accounting: the packed plane prices
+        # Z/U/z0/labels/masks at Σ bucket rows (× the shard-max factor);
+        # the strided layout at M·n_pad rows regardless of skew.  All
+        # resident iterates are f32 (comm_bf16 compresses the wire only).
+        z_cols = sum(dims[1:])                    # Z_1..Z_L feature columns
+        state_cols = dims[0] + z_cols + dims[-1]  # + z0 + U
+        rc_eff = np.asarray(self.layout.eff_row_counts(), dtype=np.int64)
+        strided_rows = m * self.layout.n_pad
+        resident_rows = self.packed_layout.total_rows if packed \
+            else strided_rows
+        self.comm_stats["state"] = {
+            "packed": packed,
+            "itemsize": 4,
+            "rows": int(resident_rows),
+            "strided_rows": int(strided_rows),
+            "bucket_rows": int(rc_eff.sum()),
+            "node_rows": int(np.asarray(self.layout.sizes).sum()),
+            "z_bytes": int(resident_rows * z_cols * 4),
+            "z_strided_bytes": int(strided_rows * z_cols * 4),
+            "resident_bytes": int(resident_rows * (state_cols + 3) * 4),
+            "strided_equiv_bytes": int(strided_rows * (state_cols + 3) * 4),
+        }
+        if self._plan is not None:
+            # analytic overlap efficiency of the round schedule — consumed
+            # by benchmarks.roofline's exposed-wire pricing
+            self.comm_stats["overlap"] = messages.overlap_stats(
+                self._plan, self.layout.neighbor_mask, gathered_cs,
+                itemsize=2 if comm_bf16 else 4, enabled=overlap_on)
+
         # full-M packed aggregation for metrics/Lagrangian: ELL in compressed
         # mode (no dense adjacency is retained on device), masked dense
         # einsum otherwise
@@ -733,9 +990,29 @@ class ParallelADMMTrainer:
         data = self.data
         f_act = gcn.activation_fn(cfg.activation)
 
+        # metrics/Lagrangian run on the blocked (M, n_pad, ...) view; in
+        # packed mode the state planes are rebuilt through the device
+        # layout's global row table (take-with-fill, bitwise lossless
+        # under the zero-outside-counts contract)
+        if packed:
+            gup = jnp.asarray(self.packed_layout.global_unpack_rows())
+            n_pad_loc = self.layout.n_pad
+
+            def unfold(p):
+                flat = jnp.take(p, gup, axis=0, mode="fill", fill_value=0)
+                return flat.reshape((m, n_pad_loc) + p.shape[1:])
+        else:
+            def unfold(p):
+                return p
+
+        z0_blk = unfold(data.z0)
+        labels_blk = unfold(data.labels)
+        train_blk = unfold(data.train_mask)
+        test_blk = unfold(data.test_mask)
+
         def forward_packed(weights):
             """Community-blocked forward pass — logits (M, n_pad, C_L)."""
-            z = data.z0
+            z = z0_blk
             for l, w in enumerate(weights):
                 z = agg_full(z) @ w
                 if l < cfg.num_layers - 1:
@@ -747,11 +1024,11 @@ class ParallelADMMTrainer:
         @jax.jit
         def metrics(state: ParallelState):
             logits = forward_packed(state.weights)
-            z_pen = state.zs[-2] if cfg.num_layers >= 2 else data.z0
-            res = (state.zs[-1] - agg_full(z_pen) @ state.weights[-1]) \
-                * row_mask
-            return (gcn.accuracy(logits, data.labels, data.train_mask),
-                    gcn.accuracy(logits, data.labels, data.test_mask),
+            z_pen = unfold(state.zs[-2]) if cfg.num_layers >= 2 else z0_blk
+            res = (unfold(state.zs[-1]) - agg_full(z_pen)
+                   @ state.weights[-1]) * row_mask
+            return (gcn.accuracy(logits, labels_blk, train_blk),
+                    gcn.accuracy(logits, labels_blk, test_blk),
                     jnp.linalg.norm(res))
 
         self._metrics = metrics
@@ -765,12 +1042,14 @@ class ParallelADMMTrainer:
             global or bucketed — never leaks into the objective, and the
             result equals the global subproblems.lagrangian_value on the
             unpacked state."""
-            ws, zs, u = state.weights, state.zs, state.u
+            ws = state.weights
+            zs = tuple(unfold(z) for z in state.zs)
+            u = unfold(state.u)
             logp = jax.nn.log_softmax(zs[-1], axis=-1)
-            nll = -jnp.take_along_axis(logp, data.labels[..., None],
+            nll = -jnp.take_along_axis(logp, labels_blk[..., None],
                                        axis=-1)[..., 0]
-            val = jnp.sum(nll * data.train_mask) / data.denom
-            z_prev = data.z0
+            val = jnp.sum(nll * train_blk) / data.denom
+            z_prev = z0_blk
             for l in range(cfg.num_layers - 1):
                 r = (zs[l] - f_act(agg_full(z_prev) @ ws[l])) * row_mask
                 val += 0.5 * admm.nu * jnp.vdot(r, r).real
@@ -785,7 +1064,7 @@ class ParallelADMMTrainer:
     def step(self) -> None:
         self.state = self._step(self.state)
 
-    def train(self, epochs: int, verbose: bool = False):
+    def train(self, epochs: int, verbose: bool = False) -> "TrainLog":
         from repro.core.serial import TrainLog
         log = TrainLog()
         for epoch in range(epochs):

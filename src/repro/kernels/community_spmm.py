@@ -157,6 +157,48 @@ def ell_spec(k: int, max_deg: int, n_pad: int, c: int, m_total: int, *,
                          "row_counts", "nbr_counts"))
 
 
+def ell_packed_spec(k: int, max_deg: int, n_pad: int, c: int,
+                    plane_rows: int, *,
+                    tile_n: int = DEFAULT_TILE_N, tile_c: int = DEFAULT_TILE_C,
+                    block_bytes: int = 4, z_bytes: int = 4) -> KernelSpec:
+    """Spec for the packed-plane ELL kernel.
+
+    Z is the packed Σ-bucket-rows receive plane ``(plane_rows, C)`` —
+    no ``(M, n_pad, C)`` stride.  The scalar-prefetched ``ell_offsets8``
+    plane carries each stored neighbour's starting row *in 8-row units*
+    (every bucket size and plane offset is a multiple of the (8, 128)
+    tile quantum), so the contraction tiles at ``tile_p = 8`` and the Z
+    DMA for contraction step p starts at block ``off8[m, d] + p``.  The
+    ``jnp.minimum`` clamp keeps the map in bounds at grid corners past a
+    neighbour's true rows — those tiles are dead (the ``nbr_counts``
+    guard skips them) but pallas still evaluates their index map.
+    """
+    tile_n = _shrink(n_pad, tile_n)
+    tile_c = _shrink(c, tile_c)
+    tile_p = 8
+    zb = plane_rows // tile_p
+    return KernelSpec(
+        name="community_spmm_ell_packed",
+        grid=(k, n_pad // tile_n, c // tile_c, max_deg, n_pad // tile_p),
+        operands=(
+            BlockOperand("ell_blocks", (k, max_deg, n_pad, n_pad),
+                         (None, None, tile_n, tile_p),
+                         lambda m, i, j, d, p, off8, msk, rows, nbr:
+                         (m, d, i, p), block_bytes),
+            BlockOperand("z_plane", (plane_rows, c),
+                         (tile_p, tile_c),
+                         lambda m, i, j, d, p, off8, msk, rows, nbr:
+                         (jnp.minimum(off8[m, d] + p, zb - 1), j), z_bytes,
+                         gather_scalar="ell_offsets8"),
+            BlockOperand("out", (k, n_pad, c), (None, tile_n, tile_c),
+                         lambda m, i, j, d, p, off8, msk, rows, nbr:
+                         (m, i, j), z_bytes),
+        ),
+        scratch_bytes=tile_n * tile_c * 4,
+        scalar_prefetch=("ell_offsets8", "ell_mask",
+                         "row_counts", "nbr_counts"))
+
+
 # ---------------------------------------------------------------------------
 # Dense-block kernel
 # ---------------------------------------------------------------------------
@@ -327,3 +369,64 @@ def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
     )(ell_indices.astype(jnp.int32), ell_mask.astype(jnp.int32),
       row_counts.astype(jnp.int32), nbr_counts.astype(jnp.int32),
       ell_blocks, z_all)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_c", "interpret"))
+def community_spmm_ell_packed(ell_blocks: jax.Array, ell_offsets: jax.Array,
+                              ell_mask: jax.Array, z_plane: jax.Array,
+                              row_counts: jax.Array,
+                              nbr_counts: jax.Array,
+                              *, tile_n: int = DEFAULT_TILE_N,
+                              tile_c: int = DEFAULT_TILE_C,
+                              interpret: bool = False) -> jax.Array:
+    """ELL aggregation over the *packed* feature plane.
+
+    Same math as ``community_spmm_ell`` but Z arrives as the packed
+    Σ-bucket-rows receive plane instead of the (M, n_pad, C) stride —
+    neighbour d of lane m occupies rows [offsets[m, d],
+    offsets[m, d] + nbr_counts[m, d]).
+
+    ell_blocks:  (k, max_deg, n_pad, n_pad) — f32 or bf16 ELL rows
+    ell_offsets: (k, max_deg) int32 packed row offsets, 8-aligned;
+                 masked-out slots may carry any in-plane value (0 is
+                 conventional — their tiles are skipped)
+    ell_mask:    (k, max_deg) — nonzero = real block
+    z_plane:     (plane_rows, C), plane_rows a multiple of 8
+    row_counts:  (k,) int32 — lane's true padded rows (8-aligned)
+    nbr_counts:  (k, max_deg) int32 — each stored neighbour's rows
+    returns      (k, n_pad, C) blocked output, rows past row_counts zero
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    k, max_deg, n_pad, _ = ell_blocks.shape
+    plane_rows, c = z_plane.shape
+    spec = ell_packed_spec(k, max_deg, n_pad, c, plane_rows,
+                           tile_n=tile_n, tile_c=tile_c,
+                           block_bytes=ell_blocks.dtype.itemsize,
+                           z_bytes=z_plane.dtype.itemsize)
+    a_op, z_op, out_op = spec.operands
+    eff_tile_n = out_op.block_shape[1]
+
+    # 8-row-unit offsets; masked slots pinned at 0 so every prefetched
+    # value indexes inside the plane (the linter bounds the value range)
+    off8 = jnp.where(ell_mask != 0, ell_offsets // 8, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,   # offsets8, ell_mask, rows, nbrs (SMEM)
+        grid=spec.grid,
+        in_specs=[
+            pl.BlockSpec(a_op.block_shape, a_op.index_map),
+            pl.BlockSpec(z_op.block_shape, z_op.index_map),
+        ],
+        out_specs=pl.BlockSpec(out_op.block_shape, out_op.index_map),
+        scratch_shapes=[_vmem_scratch(
+            (out_op.block_shape[1], out_op.block_shape[2]))],
+    )
+    return pl.pallas_call(
+        functools.partial(_spmm_ell_kernel, tile_n=eff_tile_n, tile_p=8),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(out_op.array_shape, z_plane.dtype),
+        interpret=interpret,
+    )(off8.astype(jnp.int32), ell_mask.astype(jnp.int32),
+      row_counts.astype(jnp.int32), nbr_counts.astype(jnp.int32),
+      ell_blocks, z_plane)

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.community_spmm import community_spmm as _spmm_kernel
 from repro.kernels.community_spmm import community_spmm_ell as _spmm_ell_kernel
+from repro.kernels.community_spmm import (
+    community_spmm_ell_packed as _spmm_ell_packed_kernel,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
 
@@ -88,6 +91,31 @@ def community_spmm_ell(ell_blocks: jax.Array, ell_indices: jax.Array,
                                 row_counts, nbr_counts, interpret=True)
     return ref.community_spmm_ell_einsum(ell_blocks, ell_indices, ell_mask,
                                          z_all, row_counts, nbr_counts)
+
+
+def community_spmm_ell_packed(ell_blocks: jax.Array, ell_offsets: jax.Array,
+                              ell_mask: jax.Array, z_plane: jax.Array,
+                              row_counts: jax.Array,
+                              nbr_counts: jax.Array) -> jax.Array:
+    """Packed-plane ELL aggregation: Z arrives as the packed
+    Σ-bucket-rows receive plane ``(plane_rows, C)`` and the kernel reads
+    each neighbour's rows through the scalar-prefetched ``ell_offsets``
+    (``NeighborExchange.localized_offsets``) instead of a fixed ``n_pad``
+    stride — resident gathered state is the plane, never (M, n_pad, C).
+
+    Same dispatch contract as ``community_spmm_ell``; returns the
+    blocked (k, n_pad, C) aggregate with rows past ``row_counts`` zero.
+    """
+    if _on_tpu():
+        return _spmm_ell_packed_kernel(ell_blocks, ell_offsets, ell_mask,
+                                       z_plane, row_counts, nbr_counts)
+    if _FORCE_INTERPRET:
+        return _spmm_ell_packed_kernel(ell_blocks, ell_offsets, ell_mask,
+                                       z_plane, row_counts, nbr_counts,
+                                       interpret=True)
+    return ref.community_spmm_ell_packed_einsum(ell_blocks, ell_offsets,
+                                                ell_mask, z_plane,
+                                                row_counts, nbr_counts)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

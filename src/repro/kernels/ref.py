@@ -41,6 +41,37 @@ def community_spmm_ell_einsum(ell_blocks: jax.Array, ell_indices: jax.Array,
     return out
 
 
+def community_spmm_ell_packed_einsum(ell_blocks: jax.Array,
+                                     ell_offsets: jax.Array,
+                                     ell_mask: jax.Array,
+                                     z_plane: jax.Array,
+                                     row_counts: jax.Array,
+                                     nbr_counts: jax.Array) -> jax.Array:
+    """Gather-einsum oracle for the packed-plane ELL aggregation.
+
+    ``z_plane`` is the packed (plane_rows, C) receive plane; neighbour d
+    of lane m starts at row ``ell_offsets[m, d]`` and contributes
+    ``nbr_counts[m, d]`` rows.  Rows past a neighbour's count gather the
+    fill value 0, so the blocked (m, d, n_pad, C) view this rebuilds is
+    exactly the strided oracle's masked gather.
+    """
+    k, max_deg = ell_offsets.shape
+    n_pad = ell_blocks.shape[2]
+    lane = jnp.arange(n_pad)
+    rows = ell_offsets[..., None] + lane[None, None, :]          # (k, D, n)
+    valid = (lane[None, None, :] < nbr_counts[..., None]) \
+        & (ell_mask[..., None] != 0)
+    rows = jnp.where(valid, rows, z_plane.shape[0])              # OOB -> fill
+    z_g = jnp.take(z_plane, rows.reshape(-1), axis=0, mode="fill",
+                   fill_value=0)
+    z_g = z_g.reshape(k, max_deg, n_pad, z_plane.shape[-1])
+    out = jnp.einsum("mdip,mdpc->mic",
+                     ell_blocks.astype(jnp.float32),
+                     z_g.astype(jnp.float32)).astype(z_plane.dtype)
+    return out * (lane[None, :, None]
+                  < row_counts[:, None, None]).astype(out.dtype)
+
+
 def community_spmm_ell_ref(ell_blocks: jax.Array, ell_indices: jax.Array,
                            ell_mask: jax.Array, z_all: jax.Array,
                            row_counts: jax.Array | None = None,

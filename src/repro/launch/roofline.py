@@ -28,12 +28,26 @@ __all__ = [
 ]
 
 
-def roofline_terms(flops: float, hbm_bytes: float, collective_total: float
+def roofline_terms(flops: float, hbm_bytes: float, collective_total: float,
+                   exposed_collective: "float | None" = None
                    ) -> dict[str, Any]:
-    """Per-chip terms in seconds (inputs are per-device census numbers)."""
+    """Per-chip terms in seconds (inputs are per-device census numbers).
+
+    ``exposed_collective`` (bytes) switches the collective term to
+    overlap-aware pricing: pass the exposed wire volume of the staged
+    exchange schedule (``messages.overlap_stats(...)['exposed_wire_bytes']``
+    — what the double-buffered aggregation cannot hide behind compute)
+    and the roofline prices only that, with the full scheduled volume
+    kept as ``collective_total_s`` for the no-overlap comparison.
+    """
     terms = {"compute_s": flops / PEAK_FLOPS,
-             "memory_s": hbm_bytes / HBM_BW,
-             "collective_s": collective_total / ICI_BW}
+             "memory_s": hbm_bytes / HBM_BW}
+    if exposed_collective is None:
+        terms["collective_s"] = collective_total / ICI_BW
+    else:
+        terms["collective_s"] = exposed_collective / ICI_BW
+        terms["collective_total_s"] = collective_total / ICI_BW
+        terms["collective_exposed_bytes"] = float(exposed_collective)
     terms["dominant"] = max(("compute_s", "memory_s", "collective_s"),
                             key=lambda k: terms[k])
     return terms

@@ -34,16 +34,19 @@ def ring_round_coloring(pairs, n_shards: int) -> dict[int, list]:
     ``pairs``: iterable of (src, dst) shard edges (src != dst).  Two
     messages can share a ``lax.ppermute`` round only if the round's pairs
     form a partial permutation (each shard sends to at most one destination
-    and receives from at most one source).  Colouring by the ring offset
-    ``(dst - src) mod n_shards`` satisfies this by construction — for a
-    fixed offset every source and every destination is distinct — and is
-    static, so the schedule compiles to a fixed unrolled sequence of
-    collective-permutes.  Returns {offset: sorted [(src, dst), ...]} for
-    the offsets that carry at least one message; inactive offsets (no shard
-    pair needs them) are simply absent — the rounds an all-gather-equivalent
-    ring would have wasted.
+    and receives from at most one source) — exactly a proper *edge
+    colouring* of the bipartite multigraph with sender roles on the left,
+    receiver roles on the right, and one edge per message.  König's theorem
+    says Δ = max(out-degree, in-degree) colours always suffice, and the
+    constructive proof (greedy assignment with an alternating-path colour
+    flip on conflict) achieves it in O(E·Δ), so the returned schedule is
+    round-minimal — the historic ring-offset colouring
+    ``(dst - src) mod n_shards`` could burn up to n_shards−1 rounds on a
+    Δ=2 skewed topology.  The schedule is static, so it compiles to a
+    fixed unrolled sequence of collective-permutes.  Returns
+    {colour: sorted [(src, dst), ...]} with colours contiguous from 0.
     """
-    rounds: dict[int, list] = {}
+    edges: list[tuple[int, int]] = []
     for src, dst in pairs:
         src, dst = int(src), int(dst)
         if not (0 <= src < n_shards and 0 <= dst < n_shards):
@@ -51,12 +54,60 @@ def ring_round_coloring(pairs, n_shards: int) -> dict[int, list]:
                              f"for n_shards={n_shards}")
         if src == dst:
             raise ValueError(f"self-edge {(src, dst)} needs no wire")
-        rounds.setdefault((dst - src) % n_shards, []).append((src, dst))
-    for offset, members in rounds.items():
+        edges.append((src, dst))
+    # colour -> partner maps per role-node; colour_of keyed by edge index
+    # so repeated (src, dst) messages (multigraph) stay well-defined
+    send_c: list[dict[int, int]] = [{} for _ in range(n_shards)]
+    recv_c: list[dict[int, int]] = [{} for _ in range(n_shards)]
+    colour_of: list[int] = [-1] * len(edges)
+
+    def _free(used: dict[int, int]) -> int:
+        c = 0
+        while c in used:
+            c += 1
+        return c
+
+    for ei in sorted(range(len(edges)), key=lambda i: edges[i]):
+        u, v = edges[ei]
+        cu, cv = _free(send_c[u]), _free(recv_c[v])
+        if cu != cv:
+            # cu is free at sender u but in use at receiver v: flip the
+            # alternating cu/cv path starting at v so cu frees up at v too.
+            # The path cannot reach u (cu is free there), so after the
+            # flip cu is free at both endpoints.
+            path: list[int] = []
+            node, at_recv, want = v, True, cu
+            while True:
+                nxt = (recv_c if at_recv else send_c)[node].get(want)
+                if nxt is None:
+                    break
+                path.append(nxt)
+                s, d = edges[nxt]
+                node = s if at_recv else d
+                at_recv = not at_recv
+                want = cv if want == cu else cu
+            for pe in path:
+                s, d = edges[pe]
+                del send_c[s][colour_of[pe]]
+                del recv_c[d][colour_of[pe]]
+            for pe in path:
+                s, d = edges[pe]
+                new = cv if colour_of[pe] == cu else cu
+                colour_of[pe] = new
+                send_c[s][new] = pe
+                recv_c[d][new] = pe
+        colour_of[ei] = cu
+        send_c[u][cu] = ei
+        recv_c[v][cu] = ei
+
+    rounds: dict[int, list] = {}
+    for ei, (u, v) in enumerate(edges):
+        rounds.setdefault(colour_of[ei], []).append((u, v))
+    for colour, members in rounds.items():
         members.sort()
         if len(set(s for s, _ in members)) != len(members) or \
                 len(set(d for _, d in members)) != len(members):
-            raise ValueError(f"round {offset} is not a partial permutation: "
+            raise ValueError(f"round {colour} is not a partial permutation: "
                              f"{members}")
     return dict(sorted(rounds.items()))
 

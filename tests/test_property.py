@@ -191,6 +191,46 @@ def test_ragged_blockify_roundtrip(sizes, extra, c, seed, pad_mode):
     assert layout.blockify(x).shape[0] == int(counts.sum())
 
 
+@given(lanes=st.integers(1, 4), n_shards=st.integers(1, 4),
+       size_max=st.integers(1, 40), extra=st.integers(0, 60),
+       c=st.integers(1, 5), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_packed_device_state_roundtrip(lanes, n_shards, size_max, extra,
+                                       c, seed):
+    """pack_state/unpack_state round-trips any blocked state tensor that
+    honours the zero-outside-counts contract — bitwise, for ANY community
+    size distribution (empty and singleton communities included) and any
+    divisor shard count — and the packed plane geometry always sits
+    between the Σ-bucket-rows floor and the strided M·n_pad ceiling."""
+    m = lanes * n_shards
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, size_max + 1, size=m)
+    if sizes.sum() < 2:
+        sizes[0] = 2
+    part = np.repeat(np.arange(m), sizes).astype(np.int32)
+    rng.shuffle(part)
+    n = len(part)
+    edges = _random_graph(n, extra, seed).astype(np.int32)
+    layout = graph.build_community_layout(n, edges, part, num_parts=m,
+                                          pad_mode="bucketed")
+    dl = layout.device_layout(n_shards)
+    assert dl.plane_rows % 8 == 0
+    assert dl.total_rows == n_shards * dl.plane_rows
+    assert dl.true_rows == int(layout.eff_row_counts().sum())
+    assert dl.true_rows <= dl.total_rows <= m * layout.n_pad
+    np.testing.assert_array_equal(dl.row_counts, layout.eff_row_counts())
+    x = rng.normal(size=(n, c)).astype(np.float32)
+    blocked = layout.pack(x)                   # zero outside true rows
+    packed = dl.pack_state(blocked)
+    assert packed.shape == (dl.total_rows, c)
+    np.testing.assert_array_equal(dl.unpack_state(packed), blocked)
+    # packing the unpacked plane is also lossless: every live plane row
+    # appears exactly once in the blocked stack
+    np.testing.assert_array_equal(dl.pack_state(dl.unpack_state(packed)),
+                                  packed)
+    np.testing.assert_array_equal(layout.unpack(dl.unpack_state(packed)), x)
+
+
 @given(seed=st.integers(0, 50))
 @settings(**SETTINGS)
 def test_backtracking_never_increases_objective(seed):
