@@ -91,7 +91,7 @@ def check_speedup(payload: dict) -> None:
     where = "BENCH_speedup"
     _fields(payload, {"quick": bool, "rows": list, "m32_wire": dict,
                       "m32_partition": dict, "m32_ragged": dict,
-                      "m32_packed": dict}, where)
+                      "m32_packed": dict, "m32_minibatch": dict}, where)
     modes = {r["mode"] for r in payload["rows"]}
     _require(modes == {"parallel", "compressed", "p2p", "p2p_ml"}, where,
              f"rows must cover parallel/compressed/p2p/p2p_ml, "
@@ -239,6 +239,49 @@ def check_speedup(payload: dict) -> None:
             f"{w}.roofline")
     _require(rf["collective_s"] <= rf["collective_total_s"], f"{w}.roofline",
              "overlap-aware collective term above the total-wire pricing")
+
+    # stochastic community minibatching on the same skewed M=32 graph:
+    # the sampled rounds' restricted exchange and resident sweep must both
+    # drop ≥2× vs full batch, the mean wire ratio must track the batch
+    # fraction (round padding is the only legitimate excess), and the
+    # staleness-decayed penalty must keep the sampled Lagrangian within
+    # the pinned gap of the full-batch run after the same round count.
+    mb = payload["m32_minibatch"]
+    w = f"{where}.m32_minibatch"
+    _fields(mb, {"M": int, "n_shards": int,
+                 "batch_fraction": numbers.Real, "num_batches": int,
+                 "schedule": list, "full_wire_bytes": int,
+                 "sampled_wire_bytes": list,
+                 "mean_sampled_wire_bytes": numbers.Real,
+                 "wire_ratio": numbers.Real, "full_state_rows": int,
+                 "sampled_state_rows": list,
+                 "mean_sampled_state_rows": numbers.Real,
+                 "state_ratio": numbers.Real,
+                 "lagrangian_full": numbers.Real,
+                 "lagrangian_minibatch": numbers.Real,
+                 "lagrangian_0": numbers.Real,
+                 "lagrangian_gap": numbers.Real}, w)
+    _require(mb["M"] == 32, w, "minibatch comparison must be at M=32")
+    _require(mb["mean_sampled_wire_bytes"] * 2 <= mb["full_wire_bytes"], w,
+             f"mean sampled wire {mb['mean_sampled_wire_bytes']} not ≥2× "
+             f"below the full-batch wire {mb['full_wire_bytes']}")
+    _require(mb["wire_ratio"] <= mb["batch_fraction"] + 0.10, w,
+             f"wire ratio {mb['wire_ratio']} above batch fraction "
+             f"{mb['batch_fraction']} + slack")
+    _require(mb["mean_sampled_state_rows"] * 2 <= mb["full_state_rows"], w,
+             f"mean sampled sweep rows {mb['mean_sampled_state_rows']} not "
+             f"≥2× below full batch {mb['full_state_rows']}")
+    _require(mb["lagrangian_minibatch"] < mb["lagrangian_0"], w,
+             "sampled run's Lagrangian did not descend from its start")
+    _require(mb["lagrangian_gap"] <= 0.25, w,
+             f"sampled Lagrangian gap {mb['lagrangian_gap']} above the "
+             f"pinned 25% of the full-batch value")
+    # every shard appears exactly once per sampler cycle — bounded
+    # staleness is what the decay rule's convergence story rests on
+    seen = sorted(s for b in mb["schedule"] for s in b)
+    _require(seen == list(range(mb["n_shards"])), w,
+             f"sampler cycle {mb['schedule']} does not cover every shard "
+             f"exactly once")
 
 
 CHECKS = {

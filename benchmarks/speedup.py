@@ -48,13 +48,18 @@ WORKER = textwrap.dedent("""
         step = tr.step
         adjacency_bytes = int(tr.a_tilde.nbytes)
     else:
-        from repro.core.parallel import ParallelADMMTrainer
-        transport = "p2p" if mode in ("p2p", "p2p_ml") else "allgather"
+        from repro.core.parallel import ParallelADMMTrainer, TrainerConfig
         partitioner = "multilevel" if mode == "p2p_ml" else "bfs_kl"
-        tr = ParallelADMMTrainer(
-            cfg, admm, g, num_parts=3, seed=0,
-            compressed=(mode in ("compressed", "p2p", "p2p_ml")),
-            transport=transport, partitioner=partitioner)
+        MODES = {
+            "parallel": TrainerConfig.dense(partitioner=partitioner),
+            "compressed": TrainerConfig(compressed=True,
+                                        transport="allgather",
+                                        partitioner=partitioner),
+            "p2p": TrainerConfig.p2p(partitioner=partitioner),
+            "p2p_ml": TrainerConfig.p2p(partitioner=partitioner),
+        }
+        tr = ParallelADMMTrainer(cfg, admm, g, num_parts=3, seed=0,
+                                 config=MODES[mode])
         step = tr.step
         adjacency_bytes = int(tr.data.adjacency_nbytes)
     step(); jax.block_until_ready(tr.state.zs[-1])   # compile
@@ -348,6 +353,129 @@ def packed_comparison(m: int = 32, hidden: int = 64,
     return out
 
 
+MB_WORKER = textwrap.dedent("""
+    import json, sys
+    import numpy as np, jax
+    from repro.core import graph, gcn
+    from repro.core.parallel import ParallelADMMTrainer, TrainerConfig, AXIS
+    from repro.core.subproblems import ADMMConfig
+    from repro.util.compat import make_mesh
+    m, hidden, epochs = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3])
+    frac = float(sys.argv[4])
+    g, part = graph.synthetic_powerlaw_communities(
+        m, nodes_per_part=12, attach=1, seed=0, feat_dim=hidden,
+        size_skew=1.0)
+    cfg = gcn.GCNConfig(layer_dims=(hidden, hidden,
+                                    int(np.asarray(g.labels).max()) + 1))
+    admm = ADMMConfig(nu=1e-3, rho=1e-3)
+    mesh = make_mesh((4,), (AXIS,), devices=jax.devices()[:4])
+    out = {}
+    for name, cfg_t in (("full", TrainerConfig.packed()),
+                        ("minibatch",
+                         TrainerConfig.minibatch(batch_fraction=frac))):
+        tr = ParallelADMMTrainer(cfg, admm, g, num_parts=m, seed=0,
+                                 part=part, mesh=mesh, config=cfg_t)
+        lag0 = float(tr._lagrangian(tr.state))
+        for _ in range(epochs):
+            tr.step()
+        out[name] = {"lagrangian_0": lag0,
+                     "lagrangian": float(tr._lagrangian(tr.state)),
+                     "minibatch": {k: v for k, v in
+                                   tr.comm_stats["minibatch"].items()}}
+    print(json.dumps(out))
+""")
+
+
+def minibatch_comparison(m: int = 32, hidden: int = 64,
+                         size_skew: float = 1.0, n_shards: int = 4,
+                         batch_fraction: float = 0.25,
+                         epochs: int = 10) -> dict:
+    """Stochastic community minibatching on the seed-0 size-skewed M=32
+    power-law graph over a 4-shard mesh.
+
+    Analytic half: the batch sampler's cycle-0 schedule
+    (sharding.partition.CommunityBatchSampler, Σ-bucket-rows balanced)
+    prices every sampled round's restricted exchange
+    (messages.restrict_exchange — only messages *into* sampled shards
+    survive) and the sampled resident sweep rows, against the full-batch
+    plan.  check_bench.py guards both drop ≥2× and that the wire ratio
+    stays ≤ batch_fraction + slack (round padding is the only excess).
+
+    Measured half: a 4-host-device subprocess trains the full-batch
+    packed trainer and the ``batch_fraction`` minibatch trainer for the
+    same ``epochs`` rounds and reports both augmented Lagrangians — the
+    staleness-decayed penalty (docs/minibatch.md) must keep the sampled
+    run's final Lagrangian within the pinned gap of full batch.
+    """
+    import numpy as np
+    from repro.core import graph, messages
+    from repro.sharding.partition import CommunityBatchSampler
+    g, part = graph.synthetic_powerlaw_communities(
+        m, nodes_per_part=32, attach=2, seed=0, feat_dim=hidden,
+        size_skew=size_skew)
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True,
+                                          pad_mode="bucketed")
+    plan = messages.build_neighbor_exchange(
+        layout.neighbor_mask, n_shards, layout.n_pad,
+        sizes=layout.sizes, row_counts=layout.eff_row_counts())
+    full_wire = int(messages.exchange_bytes(plan, [hidden])["wire_bytes"])
+    rc = np.asarray(layout.eff_row_counts(),
+                    dtype=np.int64).reshape(n_shards, -1)
+    shard_rows = rc.sum(axis=1)
+    sampler = CommunityBatchSampler(n_shards, batch_fraction, seed=0,
+                                    weights=shard_rows.astype(np.float64))
+    wires, rows = [], []
+    for b in sampler.cycle(0):
+        sub = plan if len(b) == n_shards else \
+            messages.restrict_exchange(plan, frozenset(b))
+        wires.append(int(messages.exchange_bytes(
+            sub, [hidden])["wire_bytes"]))
+        rows.append(int(shard_rows[list(b)].sum()))
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", MB_WORKER, str(m), "16", str(epochs),
+         str(batch_fraction)],
+        capture_output=True, text=True, env=env, check=True)
+    run = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    out = {
+        "M": m, "n_shards": n_shards, "size_skew": size_skew,
+        "batch_fraction": batch_fraction,
+        "num_batches": int(sampler.num_batches),
+        "schedule": [list(b) for b in sampler.cycle(0)],
+        "full_wire_bytes": full_wire,
+        "sampled_wire_bytes": wires,
+        "mean_sampled_wire_bytes": float(np.mean(wires)),
+        "wire_ratio": round(float(np.mean(wires)) / full_wire, 4),
+        "full_state_rows": int(shard_rows.sum()),
+        "sampled_state_rows": rows,
+        "mean_sampled_state_rows": float(np.mean(rows)),
+        "state_ratio": round(float(np.mean(rows)) / float(shard_rows.sum()),
+                             4),
+        "epochs": epochs,
+        "lagrangian_full": run["full"]["lagrangian"],
+        "lagrangian_minibatch": run["minibatch"]["lagrangian"],
+        "lagrangian_0": run["full"]["lagrangian_0"],
+        "lagrangian_gap": round(
+            (run["minibatch"]["lagrangian"] - run["full"]["lagrangian"])
+            / max(abs(run["full"]["lagrangian"]), 1e-9), 4),
+    }
+    print(f"[speedup] M={m} skew={size_skew} minibatch f={batch_fraction}: "
+          f"wire {full_wire/1e3:.0f}kB -> mean sampled "
+          f"{out['mean_sampled_wire_bytes']/1e3:.0f}kB "
+          f"({out['wire_ratio']:.0%}), sweep rows "
+          f"{out['full_state_rows']} -> {out['mean_sampled_state_rows']:.0f} "
+          f"({out['state_ratio']:.0%}); Lagrangian after {epochs} rounds "
+          f"full {out['lagrangian_full']:.4f} vs sampled "
+          f"{out['lagrangian_minibatch']:.4f} "
+          f"(gap {out['lagrangian_gap']:+.1%})")
+    return out
+
+
 def main(quick: bool = False, out: "str | None" = None):
     if quick:
         rows = run(epochs=2, hidden=32, datasets=("amazon_photo_mini",))
@@ -356,7 +484,8 @@ def main(quick: bool = False, out: "str | None" = None):
     payload = {"quick": quick, "rows": rows, "m32_wire": wire_comparison(),
                "m32_partition": partition_comparison(),
                "m32_ragged": ragged_comparison(),
-               "m32_packed": packed_comparison()}
+               "m32_packed": packed_comparison(),
+               "m32_minibatch": minibatch_comparison()}
     out_path = pathlib.Path(out) if out else \
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_speedup.json"
     out_path.write_text(json.dumps(payload, indent=2))

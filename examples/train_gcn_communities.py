@@ -13,7 +13,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.core import gcn, graph
-from repro.core.parallel import ParallelADMMTrainer
+from repro.core.parallel import ParallelADMMTrainer, TrainerConfig
 from repro.core.subproblems import ADMMConfig
 
 
@@ -63,6 +63,16 @@ def main():
     ap.add_argument("--overlap", action="store_true",
                     help="double-buffer the p2p rounds against the ELL "
                          "aggregation (requires --packed)")
+    ap.add_argument("--batch-fraction", type=float, default=None,
+                    help="stochastic community minibatching: sample this "
+                         "fraction of shards per ADMM round (seeded, "
+                         "balance-aware batches; docs/minibatch.md) — "
+                         "requires --packed; 1.0 is bitwise full-batch")
+    ap.add_argument("--stale-decay", type=float, default=0.5,
+                    help="per-round decay of unsampled communities' "
+                         "consensus penalty weight (d_r = decay^age)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="seed of the community batch sampler")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -80,15 +90,11 @@ def main():
           f"{q['edge_cut']}/{g.num_edges} ({100 * q['cut_frac']:.1f}%), "
           f"balance {q['balance']:.3f}, block max_deg {q['max_deg']}")
 
+    # every mode flag above maps 1:1 onto a TrainerConfig field by its
+    # argparse dest — the config does all cross-flag validation
     trainer = ParallelADMMTrainer(cfg, admm, g, num_parts=args.parts,
-                                  seed=0, comm_bf16=args.comm_bf16,
-                                  compressed=args.compressed,
-                                  use_kernel=args.use_kernel,
-                                  transport=args.transport,
-                                  part=part, partitioner=args.partitioner,
-                                  pad_mode=args.pad_mode,
-                                  adjacency_bf16=args.adjacency_bf16,
-                                  packed=args.packed, overlap=args.overlap)
+                                  seed=0, part=part,
+                                  config=TrainerConfig.from_cli_args(args))
     print(f"mesh: {dict(trainer.mesh.shape)}; neighbour topology:\n"
           f"{np.asarray(trainer.data.neighbor_mask).astype(int)}")
     cs = trainer.comm_stats
@@ -125,6 +131,14 @@ def main():
               f"{cs['wire_bytes'] / 1e6:.2f} MB wire hidden across "
               f"{ov['num_groups']} arrival groups "
               f"({ov['num_rounds']} rounds)")
+    if cs["minibatch"]["enabled"]:
+        mb = cs["minibatch"]
+        print(f"minibatch [f={mb['batch_fraction']}, decay="
+              f"{mb['stale_decay']}]: {mb['num_batches']} batches/cycle "
+              f"{mb['schedule']}, wire {mb['full_wire_bytes'] / 1e6:.2f} MB "
+              f"-> mean sampled {mb['mean_sampled_wire_bytes'] / 1e6:.2f} "
+              f"MB, sweep rows {mb['full_state_rows']} -> mean "
+              f"{mb['mean_sampled_state_rows']:.0f}")
 
     log = trainer.train(args.epochs, verbose=False)
     stride = max(1, args.epochs // 10)

@@ -102,16 +102,30 @@ def trainer_expectations(tr: Any) -> dict[str, Any]:
         "dense_adjacency_allowed": not tr.compressed,
         "expect_donated": (".zs", ".u"),
     }
+    # the minibatch trainer's compiled step runs a *restricted* round
+    # schedule (messages.restrict_exchange): expectations come from the
+    # active sub-plan, so the permute-schedule rule proves the sampled
+    # program touches no unsampled shard pair
+    plan = getattr(tr, "_active_plan", None) or tr._plan
     if n_shards > 1:
         # single-shard meshes compile no real collectives; the transport
         # contract is only meaningful (and checkable) on >1 shards
         exp["transport"] = tr.transport
         if tr.transport == "p2p":
-            exp["collective_budget_bytes"] = int(tr.comm_stats["wire_bytes"])
+            if plan is not tr._plan:
+                from repro.core import messages
+                bf16 = bool(getattr(getattr(tr, "config", None),
+                                    "comm_bf16", False))
+                wire = messages.exchange_bytes(
+                    plan, cs, itemsize=2 if bf16 else 4)
+                exp["collective_budget_bytes"] = int(wire["wire_bytes"])
+            else:
+                exp["collective_budget_bytes"] = \
+                    int(tr.comm_stats["wire_bytes"])
         else:
             exp["collective_budget_bytes"] = int(tr.comm_stats["full_bytes"])
-        if tr._plan is not None:
-            exp["round_pairs"] = [tuple(r.pairs) for r in tr._plan.rounds]
+        if plan is not None:
+            exp["round_pairs"] = [tuple(r.pairs) for r in plan.rounds]
         # the only legitimate all-reduces are the W-update psums: weight
         # gradients and line-search scalars, possibly combined by XLA
         w_bytes = sum(int(np.prod(w.shape)) * w.dtype.itemsize
@@ -166,13 +180,16 @@ def analyze_trainer(tr: Any, *,
     import jax
 
     exp = trainer_expectations(tr)
-    lowered = tr._step.lower(tr.state)
+    # minibatch steps take (state, nbr_decay); _analysis_args is the
+    # trainer's own account of its compiled step's signature
+    args = getattr(tr, "_analysis_args", None) or (tr.state,)
+    lowered = tr._step.lower(*args)
     exp["args_donated"] = _donation_map(lowered)
     if hlo_text is None:
         hlo_text = lowered.compile().as_text()
     jaxpr = None
     if with_jaxpr:
-        jaxpr = jax.make_jaxpr(tr._step)(tr.state)
+        jaxpr = jax.make_jaxpr(tr._step)(*args)
     ctx = AnalysisContext(hlo_text=hlo_text, jaxpr=jaxpr,
                           expectations=exp,
                           config=config or f"{tr.transport}/{tr.pad_mode}")

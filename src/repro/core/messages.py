@@ -468,6 +468,63 @@ def build_neighbor_exchange(neighbor_mask: np.ndarray, n_shards: int,
         own_copy_rows=own_copy_rows, recv_unpack_rows=recv_unpack)
 
 
+def restrict_exchange(plan: NeighborExchange,
+                      sampled_shards) -> NeighborExchange:
+    """Sampled-round sub-schedule: the plan restricted to the pairs a
+    community minibatch actually reads.
+
+    Under stochastic community minibatching only the *sampled* shards'
+    subproblems run, so only they need to receive — a ppermute pair
+    ``(src, dst)`` survives iff ``dst`` is sampled.  The source side is
+    NOT filtered: an unsampled neighbour's (stale, exact) Z/U rows still
+    feed every sampled consumer's coupling terms, so unsampled shards
+    keep sending.  Unsampled edges — pairs into unsampled shards — carry
+    zero wire: their rounds either shrink or vanish.
+
+    Buffer geometry is untouched (``needed_ids``/slots/``r_pad``/packed
+    plane tables), so ELL indices and offsets localized against the full
+    plan stay valid on the sub-schedule; rows a dropped pair would have
+    delivered simply stay zero, values an unsampled consumer never
+    reads.  Kept rounds re-pad to their largest surviving message and
+    all-dropped rounds disappear, so ``exchange_bytes`` on the sub-plan
+    prices exactly the sampled wire.  Restricting to the full shard set
+    returns ``plan`` itself — the compiled full-batch program is the
+    batch_fraction=1.0 program, bit for bit.
+    """
+    sampled = frozenset(int(s) for s in sampled_shards)
+    if not sampled:
+        raise ValueError("sampled_shards must be non-empty")
+    if not sampled <= set(range(plan.n_shards)):
+        raise ValueError(f"sampled shards {sorted(sampled)} out of range "
+                         f"for n_shards={plan.n_shards}")
+    if len(sampled) == plan.n_shards:
+        return plan
+    limit = plan.r_pad * plan.n_pad
+    rounds = []
+    for rnd in plan.rounds:
+        kept = tuple(p for p in rnd.pairs if p[1] in sampled)
+        if not kept:
+            continue
+        # per-pair true rows: a round is a partial permutation, so each
+        # destination receives exactly one message — its in-range
+        # recv_slot entries count that message's rows
+        rows_of = {p: int((rnd.recv_slot[p[1]] < limit).sum())
+                   for p in kept}
+        rows_pad = max(rows_of.values())
+        if rows_pad == 0:
+            continue
+        rounds.append(ExchangeRound(
+            offset=rnd.offset, pairs=kept, rows_pad=rows_pad,
+            send_idx=rnd.send_idx[:, :rows_pad],
+            recv_slot=rnd.recv_slot[:, :rows_pad],
+            true_rows=sum(rows_of.values()),
+            send_rows_packed=None if rnd.send_rows_packed is None
+            else rnd.send_rows_packed[:, :rows_pad],
+            recv_rows_packed=None if rnd.recv_rows_packed is None
+            else rnd.recv_rows_packed[:, :rows_pad]))
+    return dataclasses.replace(plan, rounds=tuple(rounds))
+
+
 def bf16_wire(collective: Callable[[Array], Array],
               payload: Array) -> Array:
     """Run ``collective`` on a bf16-compressed payload (half the wire

@@ -98,6 +98,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from functools import partial
 from typing import TYPE_CHECKING, NamedTuple
 
@@ -110,7 +111,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import gcn, graph, messages
-from repro.core.subproblems import ADMMConfig
+from repro.core.subproblems import ADMMConfig, stale_weights
+from repro.sharding.partition import CommunityBatchSampler
 from repro.util import shard_map
 from repro.util.compat import make_mesh
 
@@ -245,6 +247,150 @@ def community_data(g: graph.Graph, layout: graph.CommunityLayout,
 
 
 # ---------------------------------------------------------------------------
+# trainer configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    """Every mode flag of ``ParallelADMMTrainer``, validated in one place.
+
+    The flags form a dependency ladder the trainer's subsystems rely on —
+    packed planes only route through ELL offsets, the row-exact exchange
+    only feeds packed planes, sampling only restricts a p2p round
+    schedule — and ``__post_init__`` enforces the whole ladder with the
+    same messages the trainer's historic inline checks raised, so every
+    construction path (presets, CLI, benchmarks, the deprecation shim)
+    fails identically.  ``transport=None`` resolves here exactly as the
+    trainer historically did: p2p when compressed, the all-gather oracle
+    otherwise.  ``partitioner=None`` stays None — its resolution depends
+    on whether a precomputed partition is supplied, which only the
+    trainer knows.
+
+    Minibatching (``batch_fraction`` not None) engages stochastic
+    community sampling: each ADMM round runs the W/Z/U sweep on a seeded
+    shard batch only (sharding.partition.CommunityBatchSampler), with
+    unsampled communities' consensus terms carried at their stale
+    iterates under a ``stale_decay``-damped penalty
+    (subproblems.stale_weights).  ``batch_fraction=1.0`` samples every
+    shard every round and is bitwise-identical to the full-batch packed
+    trainer; ``None`` (the default) builds no sampling machinery at all.
+    """
+    compressed: bool = False
+    transport: "str | None" = None
+    partitioner: "str | None" = None
+    pad_mode: str = "bucketed"
+    packed: bool = False
+    overlap: bool = False
+    comm_bf16: bool = False
+    adjacency_bf16: bool = False
+    use_kernel: bool = False
+    batch_fraction: "float | None" = None
+    stale_decay: float = 0.5
+    sample_seed: int = 0
+
+    def __post_init__(self):
+        transport = self.transport
+        if transport is None:
+            transport = "p2p" if self.compressed else "allgather"
+            object.__setattr__(self, "transport", transport)
+        if transport not in ("p2p", "allgather"):
+            raise ValueError(f"unknown transport {transport!r}; "
+                             f"expected 'p2p' or 'allgather'")
+        if transport == "p2p" and not self.compressed:
+            raise ValueError("transport='p2p' requires compressed=True — "
+                             "the dense Z-coupling reads all M payload rows")
+        if self.packed and not self.compressed:
+            raise ValueError("packed=True requires compressed=True — the "
+                             "packed plane is only routed through ELL "
+                             "offsets, never a dense Z-coupling")
+        if self.packed and transport != "p2p":
+            raise ValueError("packed=True requires transport='p2p' — the "
+                             "plane layout exists to feed the row-exact "
+                             "exchange; an all-gather would re-materialise "
+                             "the strided (M, n_pad, C) payload")
+        if self.overlap and not self.packed:
+            raise ValueError("overlap=True requires packed=True — the "
+                             "staged exchange snapshots are packed planes")
+        if self.pad_mode not in ("global", "bucketed"):
+            raise ValueError(f"unknown pad_mode {self.pad_mode!r}; "
+                             f"expected 'global' or 'bucketed'")
+        if self.adjacency_bf16 and not self.compressed:
+            raise ValueError("adjacency_bf16=True requires compressed=True")
+        if self.batch_fraction is not None:
+            if not 0.0 < self.batch_fraction <= 1.0:
+                raise ValueError(f"batch_fraction must be in (0, 1], got "
+                                 f"{self.batch_fraction!r}")
+            if not self.packed:
+                raise ValueError("batch_fraction requires packed=True — "
+                                 "the sampled sweep runs on the sampled "
+                                 "shards' packed planes")
+            if self.overlap:
+                raise ValueError("batch_fraction is incompatible with "
+                                 "overlap=True — the arrival-group "
+                                 "schedule is derived from the full round "
+                                 "schedule, not a sampled sub-plan")
+        if not 0.0 < self.stale_decay <= 1.0:
+            raise ValueError(f"stale_decay must be in (0, 1], got "
+                             f"{self.stale_decay!r}")
+
+    @classmethod
+    def from_cli_args(cls, args) -> "TrainerConfig":
+        """Build from an argparse namespace (examples' CLI): every flag
+        is read by its ``dest`` name, missing attributes keep the field
+        default — one mapping instead of a kwarg list per driver."""
+        kw = {}
+        for f in dataclasses.fields(cls):
+            if hasattr(args, f.name):
+                kw[f.name] = getattr(args, f.name)
+        return cls(**kw)
+
+
+# named presets — attached after the class body because ``packed`` is
+# both a field and a constructor name (a def inside the class body would
+# shadow the dataclass field's default)
+def _preset_dense(cls, **kw) -> TrainerConfig:
+    """The dense-adjacency all-gather baseline."""
+    kw.setdefault("compressed", False)
+    return cls(**kw)
+
+
+def _preset_p2p(cls, **kw) -> TrainerConfig:
+    """Block-compressed adjacency over the neighbour-only p2p transport."""
+    kw.setdefault("compressed", True)
+    kw.setdefault("transport", "p2p")
+    return cls(**kw)
+
+
+def _preset_packed(cls, **kw) -> TrainerConfig:
+    """Packed Σ-bucket-rows resident state over row-exact p2p."""
+    kw.setdefault("compressed", True)
+    kw.setdefault("transport", "p2p")
+    kw.setdefault("packed", True)
+    return cls(**kw)
+
+
+def _preset_minibatch(cls, batch_fraction: float = 0.25,
+                      **kw) -> TrainerConfig:
+    """Stochastic community minibatching on the packed trainer."""
+    kw.setdefault("compressed", True)
+    kw.setdefault("transport", "p2p")
+    kw.setdefault("packed", True)
+    kw.setdefault("batch_fraction", batch_fraction)
+    return cls(**kw)
+
+
+TrainerConfig.dense = classmethod(_preset_dense)
+TrainerConfig.p2p = classmethod(_preset_p2p)
+TrainerConfig.packed = classmethod(_preset_packed)
+TrainerConfig.minibatch = classmethod(_preset_minibatch)
+
+# the historic flag kwargs the deprecation shim still accepts
+_LEGACY_FLAGS = ("use_kernel", "comm_bf16", "compressed", "transport",
+                 "partitioner", "pad_mode", "adjacency_bf16", "packed",
+                 "overlap")
+
+
+# ---------------------------------------------------------------------------
 # backtracking primitives
 # ---------------------------------------------------------------------------
 
@@ -373,8 +519,9 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                     comm_bf16: bool, compressed: bool,
                     plan: "messages.NeighborExchange | None",
                     overlap: bool, packed_aux: "dict | None",
+                    mb_aux: "dict | None",
                     adj, nbr_row, z0_loc, labels_loc, mask_loc, denom,
-                    ws, zs_loc, u_loc, taus, thetas):
+                    ws, zs_loc, u_loc, taus, thetas, nbr_decay=None):
     """Shapes per shard: nbr_row (k,M); z*_loc (k,n,C); thetas[l] (k,).
 
     ``adj`` is the shard's adjacency rows — dense mode: a_row (k,M,n,n);
@@ -401,6 +548,22 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     ``rowagg`` (the packed plane / its staged snapshots in packed mode)
     and ``blk`` is the blocked row view every other consumer indexes.
     Outside packed mode both elements are the same buffer.
+
+    ``mb_aux`` (stochastic minibatching — requires packed + compressed)
+    carries the *static* per-shard sample mask table of this compiled
+    batch: ``smask[s, j]`` is 1.0 iff shard s's lane j is sampled this
+    round (shard-granular, so a shard's lanes agree).  ``nbr_decay`` is
+    the traced (k, max_deg) staleness weight d_r = stale_decay**age_r of
+    each lane's stored neighbours (subproblems.stale_weights).  The body
+    then (a) masks unsampled lanes' residuals out of the W-update psums,
+    (b) scales every Z-coupling penalty to neighbour r by d_r — √d_r is
+    folded into ``wt`` so the squared residuals carry the full weight,
+    and the last layer's dual term gets the second √d_r explicitly —
+    and (c) applies the Z/θ/U updates through a lane ``where`` so
+    unsampled lanes keep their iterates bit-for-bit.  Every knob is
+    exact-at-identity (mask 1.0, d 1.0 → multiplies by 1.0, selects of
+    the new value), so a full batch reproduces the unsampled program
+    bitwise.
     """
     f = gcn.activation_fn(cfg.activation)
     num_layers = cfg.num_layers
@@ -409,6 +572,14 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     # union of this shard's lanes' neighbourhoods: the only communities
     # whose payload rows any local subproblem reads
     shard_nbr = jnp.max(nbrf, axis=0)            # (M,)
+
+    if mb_aux is not None:
+        smask = jnp.asarray(mb_aux["smask"])[jax.lax.axis_index(AXIS)]
+        smask_b = smask > 0                      # (k,) sampled lanes
+        sm = smask[:, None, None]                # residual mask, (k,1,1)
+        sdr = jnp.sqrt(nbr_decay)                # √d_r, (k, max_deg)
+    else:
+        smask_b = sm = sdr = None
 
     packed_wire = packed_aux is not None and plan is not None
     if packed_aux is not None:
@@ -565,13 +736,19 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     for l in range(num_layers):
         agg = rowagg(zh_in[l])                  # (k, n, C_{l-1})
 
+        # minibatch: unsampled lanes' constraints leave the (psum-ed)
+        # W objective entirely — their residuals mask to exact zeros
         if l < num_layers - 1:
             def local_obj(w, agg=agg, z=zs_loc[l]):
                 r = z - f(agg @ w)
+                if sm is not None:
+                    r = r * sm
                 return 0.5 * admm.nu * jnp.vdot(r, r).real
         else:
             def local_obj(w, agg=agg, z=zs_loc[l]):
                 r = z - agg @ w
+                if sm is not None:
+                    r = r * sm
                 return jnp.vdot(u_loc, r).real + \
                     0.5 * admm.rho * jnp.vdot(r, r).real
         w_new, tau = backtracking_step_psum(local_obj, ws[l], taus[l], admm)
@@ -605,7 +782,11 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                                  ell_rows.astype(jnp.float32), delta)
                 return q_all[ell_idx] + own                  # (k, D, n, C)
 
-            wt = ell_f[..., None, None]                      # (k, D, 1, 1)
+            # staleness damping: √d_r folded into the coupling weight, so
+            # every squared residual carries the full d_r (exact identity
+            # when all ages are 0: ell_f · 1.0 is bitwise ell_f)
+            wt = (ell_f * sdr if sdr is not None
+                  else ell_f)[..., None, None]               # (k, D, 1, 1)
 
             def nbr_vals(x_all):
                 """(M, n, C) gathered payload -> this lane's (k, D, n, C)."""
@@ -639,12 +820,22 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                 r1 = z - target1
                 v1 = 0.5 * admm.nu * jnp.sum(r1 * r1, axis=(1, 2))
                 r2 = (nbr_vals(zh_last) - pre_nbr(z)) * wt
-                lin = jnp.sum(nbr_vals(uh) * r2, axis=(1, 2, 3))
+                uv = nbr_vals(uh)
+                if sdr is not None:
+                    # second √d_r: r2 carries one, so the dual term
+                    # ⟨U_r, ·⟩ scales by the full staleness weight d_r
+                    uv = uv * sdr[..., None, None]
+                lin = jnp.sum(uv * r2, axis=(1, 2, 3))
                 quad = 0.5 * admm.rho * jnp.sum(r2 * r2, axis=(1, 2, 3))
                 return v1 + lin + quad
 
         z_new, theta = backtracking_step_lanes(
             obj_lanes, zs_loc[l - 1], thetas[l - 1], admm)
+        if smask_b is not None:
+            # unsampled lanes keep their iterates bit-for-bit (exact
+            # block-coordinate step on the sampled blocks)
+            z_new = jnp.where(smask_b[:, None, None], z_new, zs_loc[l - 1])
+            theta = jnp.where(smask_b, theta, thetas[l - 1])
         new_zs.append(z_new)
         new_thetas.append(theta)
 
@@ -652,6 +843,8 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     b = rowagg(zh_in[num_layers - 1]) @ new_ws[-1]
     z_last = fista_lanes(admm, b, u_loc, labels_loc, mask_loc,
                          zs_loc[-1], denom)
+    if smask_b is not None:
+        z_last = jnp.where(smask_b[:, None, None], z_last, zs_loc[-1])
     new_zs.append(z_last)
     new_thetas.append(thetas[-1])
 
@@ -660,6 +853,8 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
         else zh0
     b_new = rowagg(zh_pen_new) @ new_ws[-1]
     new_u = u_loc + admm.rho * (new_zs[-1] - b_new)
+    if smask_b is not None:
+        new_u = jnp.where(smask_b[:, None, None], new_u, u_loc)
 
     if packed_aux is not None:
         # carry state between steps in the packed plane — the blocked
@@ -680,45 +875,38 @@ class ParallelADMMTrainer:
 
     def __init__(self, cfg: gcn.GCNConfig, admm: ADMMConfig, g: graph.Graph,
                  num_parts: int, mesh: Mesh | None = None, seed: int = 0,
-                 use_kernel: bool = False, comm_bf16: bool = False,
-                 compressed: bool = False, part: np.ndarray | None = None,
-                 transport: str | None = None,
-                 partitioner: str | None = None,
-                 pad_mode: str = "bucketed",
-                 adjacency_bf16: bool = False,
-                 packed: bool = False,
-                 overlap: bool = False):
+                 config: TrainerConfig | None = None,
+                 part: np.ndarray | None = None,
+                 **legacy_flags):
+        if legacy_flags:
+            unknown = sorted(set(legacy_flags) - set(_LEGACY_FLAGS))
+            if unknown:
+                raise TypeError(
+                    f"ParallelADMMTrainer got unexpected keyword arguments "
+                    f"{unknown}; pass config=TrainerConfig(...)")
+            if config is not None:
+                raise ValueError(
+                    "pass either config=TrainerConfig(...) or the legacy "
+                    "flag kwargs, not both")
+            warnings.warn(
+                "ParallelADMMTrainer flag kwargs are deprecated; pass "
+                "config=TrainerConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            config = TrainerConfig(**legacy_flags)
+        elif config is None:
+            config = TrainerConfig()
+        # all cross-flag validation lives in TrainerConfig.__post_init__
+        self.config = config
         self.cfg, self.admm, self.graph = cfg, admm, g
-        self.compressed = compressed
-        if transport is None:
-            transport = "p2p" if compressed else "allgather"
-        if transport not in ("p2p", "allgather"):
-            raise ValueError(f"unknown transport {transport!r}; "
-                             f"expected 'p2p' or 'allgather'")
-        if transport == "p2p" and not compressed:
-            raise ValueError("transport='p2p' requires compressed=True — "
-                             "the dense Z-coupling reads all M payload rows")
-        self.transport = transport
-        if packed and not compressed:
-            raise ValueError("packed=True requires compressed=True — the "
-                             "packed plane is only routed through ELL "
-                             "offsets, never a dense Z-coupling")
-        if packed and transport != "p2p":
-            raise ValueError("packed=True requires transport='p2p' — the "
-                             "plane layout exists to feed the row-exact "
-                             "exchange; an all-gather would re-materialise "
-                             "the strided (M, n_pad, C) payload")
-        if overlap and not packed:
-            raise ValueError("overlap=True requires packed=True — the "
-                             "staged exchange snapshots are packed planes")
-        self.packed = packed
-        self.overlap = overlap
-        if pad_mode not in ("global", "bucketed"):
-            raise ValueError(f"unknown pad_mode {pad_mode!r}; "
-                             f"expected 'global' or 'bucketed'")
-        if adjacency_bf16 and not compressed:
-            raise ValueError("adjacency_bf16=True requires compressed=True")
-        self.pad_mode = pad_mode
+        self.compressed = compressed = config.compressed
+        self.transport = transport = config.transport
+        self.packed = packed = config.packed
+        self.overlap = overlap = config.overlap
+        self.pad_mode = pad_mode = config.pad_mode
+        use_kernel = config.use_kernel
+        comm_bf16 = config.comm_bf16
+        adjacency_bf16 = config.adjacency_bf16
+        partitioner = config.partitioner
         if part is None:
             partitioner = partitioner or "bfs_kl"
             part = graph.partition_graph(g.num_nodes, g.edges, num_parts,
@@ -837,8 +1025,6 @@ class ParallelADMMTrainer:
 
         sharded, rep = P(AXIS), P()
         n_l = cfg.num_layers
-        body = partial(_iteration_body, cfg, admm, use_kernel, comm_bf16,
-                       compressed, body_plan, overlap_on, packed_aux)
         if compressed:
             # each shard carries only its lanes' ELL rows — no dense
             # (M, M, n_pad, n_pad) tensor exists on device — plus its
@@ -850,27 +1036,87 @@ class ParallelADMMTrainer:
         else:
             adj_data = self.data.a_blocks
             adj_spec = sharded
-        in_specs = (adj_spec, sharded, sharded, sharded, sharded, rep,
-                    (rep,) * n_l, (sharded,) * n_l, sharded,
-                    (rep,) * n_l, (sharded,) * n_l)
-        out_specs = ((rep,) * n_l, (sharded,) * n_l, sharded,
-                     (rep,) * n_l, (sharded,) * n_l)
-        mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_rep=False)
+        data = self.data
+        k_lanes = m // n_shards
 
-        # the state rebinds every step: donating it lets XLA reuse the
-        # Z/U/weight buffers in place instead of doubling peak HBM
-        # (memory/donated-inputs proves this holds on the compiled step)
-        @partial(jax.jit, donate_argnums=(0,))
-        def step(state: ParallelState):
-            ws, zs, u, taus, thetas = mapped(
-                adj_data, self.data.neighbor_mask,
-                self.data.z0, self.data.labels,
-                self.data.train_mask, self.data.denom,
-                state.weights, state.zs, state.u, state.taus, state.thetas)
-            return ParallelState(ws, zs, u, taus, thetas)
+        def make_step(sampled=None):
+            """Compile one ADMM step.  ``sampled`` (an iterable of shard
+            ids) builds the stochastic-minibatch variant: the p2p round
+            schedule is restricted to messages whose destination shard is
+            sampled (messages.restrict_exchange — unsampled shards send
+            their stale-but-exact rows, receive nothing), a static lane
+            mask bakes the batch into the program, and a traced
+            (M, max_deg) staleness weight rides along as the single extra
+            input.  One program per distinct shard batch; the sampler's
+            cycle structure bounds the program count by ``num_batches``."""
+            if sampled is None:
+                step_plan, mb_aux = body_plan, None
+            else:
+                sampled = frozenset(int(s) for s in sampled)
+                step_plan = body_plan if body_plan is None else \
+                    messages.restrict_exchange(body_plan, sampled)
+                smask = np.zeros((n_shards, k_lanes), dtype=np.float32)
+                smask[sorted(sampled)] = 1.0
+                mb_aux = {"smask": smask}
+            body = partial(_iteration_body, cfg, admm, use_kernel,
+                           comm_bf16, compressed, step_plan, overlap_on,
+                           packed_aux, mb_aux)
+            in_specs = (adj_spec, sharded, sharded, sharded, sharded, rep,
+                        (rep,) * n_l, (sharded,) * n_l, sharded,
+                        (rep,) * n_l, (sharded,) * n_l)
+            out_specs = ((rep,) * n_l, (sharded,) * n_l, sharded,
+                         (rep,) * n_l, (sharded,) * n_l)
+            if mb_aux is not None:
+                in_specs = in_specs + (sharded,)
+            mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
 
-        self._step = step
+            # the state rebinds every step: donating it lets XLA reuse the
+            # Z/U/weight buffers in place instead of doubling peak HBM
+            # (memory/donated-inputs proves this holds on the compiled step)
+            if mb_aux is None:
+                @partial(jax.jit, donate_argnums=(0,))
+                def step(state: ParallelState):
+                    ws, zs, u, taus, thetas = mapped(
+                        adj_data, data.neighbor_mask, data.z0, data.labels,
+                        data.train_mask, data.denom, state.weights,
+                        state.zs, state.u, state.taus, state.thetas)
+                    return ParallelState(ws, zs, u, taus, thetas)
+            else:
+                @partial(jax.jit, donate_argnums=(0,))
+                def step(state: ParallelState, nbr_decay):
+                    ws, zs, u, taus, thetas = mapped(
+                        adj_data, data.neighbor_mask, data.z0, data.labels,
+                        data.train_mask, data.denom, state.weights,
+                        state.zs, state.u, state.taus, state.thetas,
+                        nbr_decay)
+                    return ParallelState(ws, zs, u, taus, thetas)
+            return step, step_plan
+
+        self._make_step = make_step
+        self._sampler = None
+        self._round = 0
+        if config.batch_fraction is None:
+            self._step, _ = make_step(None)
+            self._active_plan = self._plan
+        else:
+            # shard batch weights = Σ bucket rows hosted, so the greedy
+            # balance targets resident/wire work, not shard count alone
+            rc_shard = np.asarray(self.layout.eff_row_counts(),
+                                  dtype=np.float64).reshape(
+                n_shards, k_lanes).sum(axis=1)
+            self._sampler = CommunityBatchSampler(
+                n_shards, config.batch_fraction,
+                seed=config.sample_seed, weights=rc_shard)
+            csr_mb = self.layout.compress()
+            self._mb_nbr = np.asarray(csr_mb.ell_indices)  # (M, D) global
+            self._mb_k = k_lanes
+            self._ages = np.zeros(m, dtype=np.int64)
+            self._mb_steps = {}
+            batch0 = frozenset(self._sampler.batch(0))
+            self._mb_steps[batch0] = make_step(batch0)
+            self._step, plan0 = self._mb_steps[batch0]
+            self._active_plan = plan0 if plan0 is not None else self._plan
 
         # collective volume per iteration: the gathers the body issues are
         # one (M, n_pad, C) payload each for Z_0 (gathered exactly once per
@@ -967,6 +1213,37 @@ class ParallelADMMTrainer:
             self.comm_stats["overlap"] = messages.overlap_stats(
                 self._plan, self.layout.neighbor_mask, gathered_cs,
                 itemsize=2 if comm_bf16 else 4, enabled=overlap_on)
+        if self._sampler is None:
+            self.comm_stats["minibatch"] = {"enabled": False}
+        else:
+            # sampled-round accounting over the first sampler cycle: every
+            # batch's restricted schedule is priced with the same
+            # exchange_bytes the full plan uses, so the wire ratio is an
+            # apples-to-apples sub-plan/plan comparison
+            cyc = self._sampler.cycle(0)
+            wires, rows = [], []
+            rc_sh = np.asarray(self.layout.eff_row_counts(),
+                               dtype=np.int64).reshape(n_shards, k_lanes)
+            for b in cyc:
+                sub = self._plan if len(b) == n_shards else \
+                    messages.restrict_exchange(self._plan, frozenset(b))
+                wires.append(int(messages.exchange_bytes(
+                    sub, gathered_cs, itemsize=item)["wire_bytes"]))
+                rows.append(int(rc_sh[list(b)].sum()))
+            self.comm_stats["minibatch"] = {
+                "enabled": True,
+                "batch_fraction": float(config.batch_fraction),
+                "stale_decay": float(config.stale_decay),
+                "sample_seed": int(config.sample_seed),
+                "num_batches": int(self._sampler.num_batches),
+                "schedule": [list(b) for b in cyc],
+                "sampled_wire_bytes": wires[0],
+                "mean_sampled_wire_bytes": float(np.mean(wires)),
+                "full_wire_bytes": int(self.comm_stats["wire_bytes"]),
+                "sampled_state_rows": rows[0],
+                "mean_sampled_state_rows": float(np.mean(rows)),
+                "full_state_rows": int(rc_sh.sum()),
+            }
 
         # full-M packed aggregation for metrics/Lagrangian: ELL in compressed
         # mode (no dense adjacency is retained on device), masked dense
@@ -1061,8 +1338,49 @@ class ParallelADMMTrainer:
 
         self._lagrangian = lagrangian
 
+    def _nbr_decay(self):
+        """Per-ELL-slot staleness weight d_r = stale_decay**age_r, looked
+        up by the *global* neighbour community id (the body's localized
+        indices never see community ids, so the table is built host-side
+        and traced in as the step's one extra input)."""
+        d = stale_weights(self._ages, self.config.stale_decay)
+        return d[self._mb_nbr]                            # (M, max_deg)
+
+    def _step_for(self, shards: frozenset):
+        entry = self._mb_steps.get(shards)
+        if entry is None:
+            entry = self._make_step(shards)
+            self._mb_steps[shards] = entry
+        return entry
+
+    @property
+    def _analysis_args(self):
+        """Arguments the compiled ``_step`` is lowered with (analysis)."""
+        if self._sampler is None:
+            return (self.state,)
+        return (self.state, self._nbr_decay())
+
     def step(self) -> None:
-        self.state = self._step(self.state)
+        if self._sampler is None:
+            self.state = self._step(self.state)
+            return
+        shards = frozenset(self._sampler.batch(self._round))
+        step_fn, plan = self._step_for(shards)
+        self._step = step_fn
+        self._active_plan = plan if plan is not None else self._plan
+        self.state = step_fn(self.state, self._nbr_decay())
+        # ages advance after the round: a community sampled this round
+        # ends it fresh (age 0 — "reset on resample"), everyone else's
+        # consensus terms are one round staler
+        self._ages += 1
+        k = self._mb_k
+        for s in shards:
+            self._ages[s * k:(s + 1) * k] = 0
+        self._round += 1
+        mb = self.comm_stats["minibatch"]
+        mb["rounds"] = self._round
+        mb["last_batch"] = sorted(shards)
+        mb["max_age"] = int(self._ages.max())
 
     def train(self, epochs: int, verbose: bool = False) -> "TrainLog":
         from repro.core.serial import TrainLog

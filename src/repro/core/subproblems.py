@@ -105,6 +105,31 @@ def backtracking_step(obj: Callable[[Array], Array], x: Array, tau0: Array,
     return x_new, tau
 
 
+def stale_weights(ages: Array, stale_decay: float) -> Array:
+    """Staleness-decayed penalty weights for stochastic community batches.
+
+    Under minibatched ADMM (parallel trainer, ``batch_fraction`` < 1) the
+    communities left out of a round keep their Z/U at the last written
+    iterate — exact values, merely ``age`` rounds old.  The sampled
+    communities' coupling terms to a neighbour r are down-weighted by
+
+        d_r = stale_decay ** age_r                       (d_r ∈ (0, 1])
+
+    i.e. the effective penalties become ν·d_r and ρ·d_r and the dual term
+    ⟨U_r, ·⟩ scales by d_r — a damped augmented Lagrangian that trusts a
+    neighbour's constraint residual less the longer its iterate has been
+    frozen.  ``age_r`` resets to 0 on resample, restoring full weight.
+
+    Two exactness anchors the trainer's parity tests pin:
+      * age 0 ⇒ d = 1.0 *bitwise* (IEEE pow(x, 0) == 1.0), so a full
+        batch (every age 0) reproduces the undamped objective exactly;
+      * stale_decay = 1.0 ⇒ d = 1.0 for every age — sampling degrades to
+        exact block-coordinate descent with undamped couplings.
+    """
+    base = jnp.asarray(stale_decay, dtype=jnp.float32)
+    return jnp.power(base, jnp.asarray(ages).astype(jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # ψ objectives for Z updates (Appendix A, global form)
 # ---------------------------------------------------------------------------

@@ -40,6 +40,11 @@ QUICK_CONFIGS = [
      "packed": True},
     {"name": "p2p_packed_overlap", "transport": "p2p",
      "pad_mode": "bucketed", "packed": True, "overlap": True},
+    # stochastic minibatching: the collective/permute-schedule rule proves
+    # the compiled sampled step's ppermute pairs are exactly the
+    # restricted sub-plan's — no collective touches an unsampled shard pair
+    {"name": "p2p_minibatch", "transport": "p2p", "pad_mode": "bucketed",
+     "packed": True, "batch_fraction": 0.5, "stale_decay": 0.5},
 ]
 FULL_CONFIGS = QUICK_CONFIGS + [
     {"name": "dense_allgather", "transport": "allgather",
@@ -61,7 +66,7 @@ def _build_trainer(spec: dict):
     import jax
 
     from repro.core import gcn, graph
-    from repro.core.parallel import AXIS, ParallelADMMTrainer
+    from repro.core.parallel import AXIS, ParallelADMMTrainer, TrainerConfig
     from repro.core.subproblems import ADMMConfig
     from repro.util.compat import make_mesh
 
@@ -72,14 +77,13 @@ def _build_trainer(spec: dict):
     admm = ADMMConfig(nu=1e-3, rho=1e-3)
     mesh = make_mesh((N_SHARDS,), (AXIS,),
                      devices=jax.devices()[:N_SHARDS])
-    return ParallelADMMTrainer(
-        cfg, admm, g, num_parts=8, seed=0, part=part, mesh=mesh,
-        compressed=spec.get("compressed", True),
-        transport=spec["transport"], pad_mode=spec["pad_mode"],
-        comm_bf16=spec.get("comm_bf16", False),
-        adjacency_bf16=spec.get("adjacency_bf16", False),
-        packed=spec.get("packed", False),
-        overlap=spec.get("overlap", False))
+    # the spec dicts ARE TrainerConfig kwargs (single source of truth);
+    # only the compressed default differs from the dataclass default
+    kw = {k: v for k, v in spec.items() if k != "name"}
+    kw.setdefault("compressed", True)
+    return ParallelADMMTrainer(cfg, admm, g, num_parts=8, seed=0,
+                               part=part, mesh=mesh,
+                               config=TrainerConfig(**kw))
 
 
 def run_configs(configs: list[dict]) -> list:

@@ -112,6 +112,71 @@ def ring_round_coloring(pairs, n_shards: int) -> dict[int, list]:
     return dict(sorted(rounds.items()))
 
 
+class CommunityBatchSampler:
+    """Seeded, balance-aware random multi-cluster batches (Cluster-GCN).
+
+    Sampling granularity is the SHARD — a shard's k communities always
+    travel together (they share a device, a packed state plane and an
+    exchange-plan slot table, so sampling below shard granularity would
+    fragment the compiled program without saving resident bytes).  With
+    one community per shard (the benchmark deployment) this is exact
+    per-community sampling, the paper-faithful regime.
+
+    Each *cycle* partitions all ``n_shards`` shards into
+    ``num_batches = min(n_shards, round(1/batch_fraction))`` batches, so
+    every shard is sampled exactly once per cycle — staleness is bounded
+    by ``num_batches - 1`` rounds by construction.  Batches are
+    balance-aware: shards are shuffled (seeded per cycle), stably sorted
+    heaviest-first by ``weights`` (Σ bucket rows — the resident/compute
+    load), and greedily dropped into the lightest batch, so a size-skewed
+    partition does not stack its giants into one round.  Deterministic
+    for a fixed ``seed``: batch ``t`` is a pure function of (seed, t).
+    """
+
+    def __init__(self, n_shards: int, batch_fraction: float, seed: int = 0,
+                 weights: "np.ndarray | None" = None):
+        if not 0.0 < batch_fraction <= 1.0:
+            raise ValueError(f"batch_fraction must be in (0, 1], got "
+                             f"{batch_fraction!r}")
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = int(n_shards)
+        self.batch_fraction = float(batch_fraction)
+        self.num_batches = min(self.n_shards,
+                               max(1, int(round(1.0 / batch_fraction))))
+        self.seed = int(seed)
+        if weights is None:
+            w = np.ones(self.n_shards, dtype=np.float64)
+        else:
+            w = np.asarray(weights, dtype=np.float64)
+            if w.shape != (self.n_shards,):
+                raise ValueError(f"weights must be ({self.n_shards},), "
+                                 f"got {w.shape}")
+        self.weights = np.maximum(w, 1.0)
+        self._cycles: dict[int, tuple[tuple[int, ...], ...]] = {}
+
+    def cycle(self, c: int) -> tuple[tuple[int, ...], ...]:
+        """The ``num_batches`` shard batches of cycle ``c`` (memoised)."""
+        if c not in self._cycles:
+            rng = np.random.default_rng((self.seed, int(c)))
+            order = rng.permutation(self.n_shards)
+            # heaviest first, ties in the cycle's random order (stable)
+            order = order[np.argsort(-self.weights[order], kind="stable")]
+            batches: list[list[int]] = [[] for _ in range(self.num_batches)]
+            loads = np.zeros(self.num_batches)
+            for s in order:
+                b = int(np.argmin(loads))
+                batches[b].append(int(s))
+                loads[b] += self.weights[s]
+            self._cycles[c] = tuple(tuple(sorted(b)) for b in batches)
+        return self._cycles[c]
+
+    def batch(self, t: int) -> tuple[int, ...]:
+        """Sampled shard ids of round ``t`` (sorted, non-empty)."""
+        c, i = divmod(int(t), self.num_batches)
+        return self.cycle(c)[i]
+
+
 def _axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
 
