@@ -91,7 +91,8 @@ def check_speedup(payload: dict) -> None:
     where = "BENCH_speedup"
     _fields(payload, {"quick": bool, "rows": list, "m32_wire": dict,
                       "m32_partition": dict, "m32_ragged": dict,
-                      "m32_packed": dict, "m32_minibatch": dict}, where)
+                      "m32_packed": dict, "m32_minibatch": dict,
+                      "m32_fused": dict}, where)
     modes = {r["mode"] for r in payload["rows"]}
     _require(modes == {"parallel", "compressed", "p2p", "p2p_ml"}, where,
              f"rows must cover parallel/compressed/p2p/p2p_ml, "
@@ -282,6 +283,44 @@ def check_speedup(payload: dict) -> None:
     _require(seen == list(range(mb["n_shards"])), w,
              f"sampler cycle {mb['schedule']} does not cover every shard "
              f"exactly once")
+
+    # fused aggregation→Z-update kernel: the fused step's aggregated
+    # (k, n_pad, C) HBM intermediate must vanish (strictly below the
+    # unfused write+read traffic), the traced-jaxpr aggregation→dot
+    # handoff count must sit at the W-update floor of one per layer and
+    # strictly below the unfused step's, and the fused-vs-unfused state
+    # divergence (dot-order reassociation only) stays within the pinned
+    # tolerance.
+    fu = payload["m32_fused"]
+    w = f"{where}.m32_fused"
+    _fields(fu, {"M": int, "n_shards": int, "num_layers": int,
+                 "agg_rows": int, "sites": int,
+                 "unfused_intermediate_bytes": int,
+                 "fused_intermediate_bytes": int,
+                 "gemm_out_bytes": int,
+                 "traffic_reduction": numbers.Real,
+                 "parity_max_delta": numbers.Real,
+                 "parity_tol": numbers.Real,
+                 "fused_handoffs": int, "unfused_handoffs": int}, w)
+    _require(fu["M"] == 32, w, "fused comparison must be at M=32")
+    _require(fu["fused_intermediate_bytes"]
+             < fu["unfused_intermediate_bytes"], w,
+             f"fused intermediate HBM {fu['fused_intermediate_bytes']} not "
+             f"below unfused {fu['unfused_intermediate_bytes']}")
+    _require(fu["fused_intermediate_bytes"] == 0, w,
+             "fused aggregate must never land in HBM (VMEM scratch only)")
+    _require(fu["fused_handoffs"] <= fu["num_layers"], w,
+             f"fused step hands {fu['fused_handoffs']} aggregates to dots — "
+             f"above the W-update floor of {fu['num_layers']}")
+    _require(fu["fused_handoffs"] < fu["unfused_handoffs"], w,
+             f"fused handoffs {fu['fused_handoffs']} not below unfused "
+             f"{fu['unfused_handoffs']}")
+    _require(fu["parity_tol"] <= 1e-6, w,
+             f"parity tolerance {fu['parity_tol']} looser than the pinned "
+             f"1e-6")
+    _require(fu["parity_max_delta"] <= fu["parity_tol"], w,
+             f"fused-vs-unfused divergence {fu['parity_max_delta']} above "
+             f"the pinned tolerance {fu['parity_tol']}")
 
 
 CHECKS = {

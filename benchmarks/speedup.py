@@ -476,6 +476,134 @@ def minibatch_comparison(m: int = 32, hidden: int = 64,
     return out
 
 
+FU_WORKER = textwrap.dedent("""
+    import json, sys
+    import numpy as np, jax
+    import jax.numpy as jnp
+    from repro.core import graph, gcn
+    from repro.core.parallel import ParallelADMMTrainer, TrainerConfig, AXIS
+    from repro.core.subproblems import ADMMConfig
+    from repro.util.compat import make_mesh
+    from repro.analysis.rules.memory import fused_agg_handoffs
+    m, hidden, epochs = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3])
+    g, part = graph.synthetic_powerlaw_communities(
+        m, nodes_per_part=12, attach=1, seed=0, feat_dim=hidden,
+        size_skew=1.0)
+    cfg = gcn.GCNConfig(layer_dims=(hidden, hidden,
+                                    int(np.asarray(g.labels).max()) + 1))
+    admm = ADMMConfig(nu=1e-3, rho=1e-3)
+    mesh = make_mesh((4,), (AXIS,), devices=jax.devices()[:4])
+    out = {"num_layers": cfg.num_layers}
+    trs = {}
+    for name, fused in (("unfused", False), ("fused", True)):
+        tr = ParallelADMMTrainer(
+            cfg, admm, g, num_parts=m, seed=0, part=part, mesh=mesh,
+            config=TrainerConfig(compressed=True, transport="p2p",
+                                 pad_mode="bucketed", packed=True,
+                                 fused=fused))
+        jx = jax.make_jaxpr(tr._step)(tr.state)
+        out[name + "_handoffs"] = len(fused_agg_handoffs(jx,
+                                                         tr.layout.n_pad))
+        trs[name] = tr
+    def delta(a, b):
+        return max(
+            max(float(jnp.max(jnp.abs(x - y)))
+                for x, y in zip(a.weights, b.weights)),
+            max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(a.zs, b.zs)),
+            float(jnp.max(jnp.abs(a.u - b.u))))
+    # per-iteration parity from a shared input state: the backtracking
+    # line searches branch on loss comparisons, so across iterations a
+    # dot-order epsilon can flip a step count and the trajectories
+    # diverge discretely — parity is pinned per step, not per trajectory
+    # (copies because the step jit donates its input buffers)
+    state = trs["unfused"].state
+    deltas = []
+    for _ in range(epochs):
+        fused_next = trs["fused"]._step(jax.tree.map(jnp.copy, state))
+        state = trs["unfused"]._step(state)
+        deltas.append(delta(state, fused_next))
+    out["parity_max_delta"] = max(deltas)
+    out["lagrangian_unfused"] = float(trs["unfused"]._lagrangian(state))
+    out["lagrangian_fused"] = float(trs["fused"]._lagrangian(fused_next))
+    print(json.dumps(out))
+""")
+
+
+def fused_comparison(m: int = 32, hidden: int = 64,
+                     size_skew: float = 1.0, n_shards: int = 4,
+                     epochs: int = 3) -> dict:
+    """Fused aggregation→Z-update kernel vs the two-step packed path on
+    the seed-0 power-law graph at M=32 over a 4-shard mesh.
+
+    Analytic half: per shard per iteration, every Z-update
+    aggregation→GEMM site unfused writes its aggregated (k, n_pad, C_in)
+    stack to HBM and reads it back for the GEMM — the fused kernel keeps
+    it in VMEM scratch, so its HBM intermediate traffic is zero
+    (roofline.fused_agg_traffic prices both).  Measured half: a
+    4-host-device subprocess steps the fused and unfused packed trainers
+    from a shared state each round and reports the max per-iteration
+    W/Z/U divergence (the fused GEMM reassociates (A·Z)·W to A·(Z·W) —
+    dot-order tolerance, pinned at 1e-6 by check_bench.py; the
+    line-search branches make *trajectory* divergence discrete, so
+    parity is per step) plus the traced jaxpr's
+    aggregation→dot handoff counts (the memory/fused-no-intermediate
+    dataflow walk): the fused step must sit at the W-update floor of one
+    per layer, strictly below the unfused step.
+    """
+    from repro.core import graph
+    from repro.launch.roofline import fused_agg_traffic
+    g, part = graph.synthetic_powerlaw_communities(
+        m, nodes_per_part=32, attach=2, seed=0, feat_dim=hidden,
+        size_skew=size_skew)
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True,
+                                          pad_mode="bucketed")
+    num_classes = g.num_classes
+    dims = [hidden, hidden, num_classes]
+    L = len(dims) - 1
+    # the fused Z-update sites per iteration: target1 (hidden layers),
+    # q (hidden layers), and the Z_L target b evaluated twice by the
+    # penultimate refresh (b, b_new)
+    sites = [(dims[l - 1], dims[l]) for l in range(1, L)] \
+        + [(dims[l], dims[l + 1]) for l in range(1, L)] \
+        + [(dims[L - 1], dims[L])] * 2
+    traffic = fused_agg_traffic((m // n_shards) * layout.n_pad, sites)
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", FU_WORKER, str(m), "16", str(epochs)],
+        capture_output=True, text=True, env=env, check=True)
+    run = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    out = {
+        "M": m, "n_shards": n_shards, "hidden": hidden,
+        "n_pad": int(layout.n_pad),
+        "num_layers": int(run["num_layers"]),
+        **traffic,
+        "traffic_reduction": round(
+            1.0 - traffic["fused_intermediate_bytes"]
+            / max(traffic["unfused_intermediate_bytes"], 1), 4),
+        "epochs": epochs,
+        "parity_max_delta": float(run["parity_max_delta"]),
+        "parity_tol": 1e-6,
+        "fused_handoffs": int(run["fused_handoffs"]),
+        "unfused_handoffs": int(run["unfused_handoffs"]),
+        "lagrangian_fused": run["lagrangian_fused"],
+        "lagrangian_unfused": run["lagrangian_unfused"],
+    }
+    print(f"[speedup] M={m} fused agg→GEMM over {n_shards} shards: "
+          f"intermediate HBM "
+          f"{out['unfused_intermediate_bytes']/1e3:.0f}kB/shard/iter -> "
+          f"{out['fused_intermediate_bytes']}B "
+          f"({out['traffic_reduction']:.0%} down, {out['sites']} sites); "
+          f"agg→dot handoffs {out['unfused_handoffs']} -> "
+          f"{out['fused_handoffs']}; parity after {epochs} rounds "
+          f"{out['parity_max_delta']:.2e} (tol {out['parity_tol']:.0e})")
+    return out
+
+
 def main(quick: bool = False, out: "str | None" = None):
     if quick:
         rows = run(epochs=2, hidden=32, datasets=("amazon_photo_mini",))
@@ -485,7 +613,8 @@ def main(quick: bool = False, out: "str | None" = None):
                "m32_partition": partition_comparison(),
                "m32_ragged": ragged_comparison(),
                "m32_packed": packed_comparison(),
-               "m32_minibatch": minibatch_comparison()}
+               "m32_minibatch": minibatch_comparison(),
+               "m32_fused": fused_comparison()}
     out_path = pathlib.Path(out) if out else \
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_speedup.json"
     out_path.write_text(json.dumps(payload, indent=2))

@@ -63,6 +63,11 @@ def main():
     ap.add_argument("--overlap", action="store_true",
                     help="double-buffer the p2p rounds against the ELL "
                          "aggregation (requires --packed)")
+    ap.add_argument("--fused", action="store_true",
+                    help="fuse the packed ELL aggregation with the "
+                         "Z-update GEMM in one Pallas pass (docs/layout.md "
+                         "§5) — requires --packed; the aggregated "
+                         "intermediate never touches HBM")
     ap.add_argument("--batch-fraction", type=float, default=None,
                     help="stochastic community minibatching: sample this "
                          "fraction of shards per ADMM round (seeded, "

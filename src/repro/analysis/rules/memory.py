@@ -11,6 +11,7 @@ from typing import Iterable
 
 from repro.analysis.findings import Finding, Severity
 from repro.analysis.registry import AnalysisContext, rule
+from repro.analysis.rules.precision import _sub_jaxprs
 
 
 @rule("memory/no-dense-adjacency")
@@ -90,6 +91,92 @@ def packed_resident_state(ctx: AnalysisContext) -> Iterable[Finding]:
                 details={"shape": list(dims), "rows": dims[0],
                          "packed_rows_bound": bound,
                          "computation": comp.name})
+
+
+def fused_agg_handoffs(closed_jaxpr: "object", n_pad: int) -> list[dict]:
+    """Aggregated block stacks handed to a GEMM, from a dataflow walk.
+
+    An *aggregation* is any equation consuming an ELL-block-shaped
+    operand (trailing dims (n_pad, n_pad), rank ≥ 4 — the einsum oracle's
+    block store or a pallas_call's block operand) whose output is a 3-D
+    ``(rows, n_pad, C ≠ n_pad)`` stack.  The taint follows the stack
+    only through ``add``/casts (the overlap path sums per-group partials
+    before consuming them) — NOT through arbitrary shape-preserving ops,
+    or the fused sites' own outputs would leak taint down activation and
+    cotangent chains into the lane solvers' dots.  A *handoff* is
+    recorded when a tainted var feeds a ``dot_general`` — each distinct
+    stack counted once, however many dots the autodiff machinery derives
+    from it.  Importable directly (tests); the registry rule wraps it.
+    """
+    handoffs: list[dict] = []
+    seen: set[int] = set()
+    carriers = {"add", "convert_element_type", "copy"}
+
+    def shp(v):
+        return tuple(getattr(getattr(v, "aval", None), "shape", ()) or ())
+
+    def walk(jaxpr, path: str) -> None:
+        if id(jaxpr) in seen:
+            return
+        seen.add(id(jaxpr))
+        tainted: dict[int, dict] = {}
+        consumed: dict[int, dict] = {}
+        for i, eqn in enumerate(jaxpr.eqns):
+            name = eqn.primitive.name
+            loc = f"{path}eqns[{i}]:{name}"
+            if name == "dot_general":
+                for v in eqn.invars:
+                    if id(v) in tainted and id(v) not in consumed:
+                        consumed[id(v)] = dict(tainted[id(v)], dot=loc)
+            has_blocks = any(
+                len(s) >= 4 and s[-1] == n_pad and s[-2] == n_pad
+                for s in (shp(v) for v in eqn.invars))
+            for v in eqn.outvars:
+                s = shp(v)
+                if len(s) != 3 or s[-2] != n_pad or s[-1] == n_pad:
+                    continue
+                if has_blocks:
+                    tainted[id(v)] = {"producer": loc, "shape": list(s)}
+                elif name in carriers:
+                    src = next((tainted[id(u)] for u in eqn.invars
+                                if id(u) in tainted), None)
+                    if src is not None:
+                        tainted[id(v)] = src
+            for sub in _sub_jaxprs(eqn.params):
+                walk(sub, loc + "/")
+        handoffs.extend(consumed.values())
+
+    walk(getattr(closed_jaxpr, "jaxpr", closed_jaxpr), "")
+    return handoffs
+
+
+@rule("memory/fused-no-intermediate")
+def fused_no_intermediate(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Under ``TrainerConfig(fused=True)`` the compiled step materialises
+    no HBM-resident aggregated ``(rows, n_pad, C)`` stack feeding a GEMM
+    beyond the W-update allowance (one per layer — its line search
+    legitimately re-reads the aggregate under a varying W).  Checked on
+    the traced jaxpr, where the handoff survives on every dispatch
+    target: the TPU program would show a pallas_call output into a dot,
+    the CPU oracle an einsum output into a dot — the fused kernel keeps
+    the aggregate in VMEM scratch and the fused oracle reassociates it
+    away, so either way the count stays at the W-update floor."""
+    exp = ctx.expectations
+    n_pad = exp.get("n_pad")
+    if ctx.jaxpr is None or not n_pad or not exp.get("fused"):
+        return
+    allowed = int(exp.get("fused_max_agg_handoffs", 0))
+    found = fused_agg_handoffs(ctx.jaxpr, int(n_pad))
+    if len(found) > allowed:
+        yield Finding(
+            "memory/fused-no-intermediate", Severity.ERROR,
+            f"{len(found)} aggregated (rows, {n_pad}, C) stacks feed a "
+            f"dot_general — the fused step allows {allowed} (the "
+            f"W-update line-search aggregates); extra handoffs mean an "
+            f"unfused aggregation→GEMM site materialises its aggregate",
+            location=found[0].get("dot"),
+            details={"handoffs": found[:16],
+                     "allowed": allowed, "count": len(found)})
 
 
 @rule("memory/hbm-intermediate-budget")

@@ -31,7 +31,8 @@ def _gathered_cs(cfg: Any) -> list[int]:
 def _kernel_entries(tr: Any, n_shards: int) -> list[dict]:
     """One ELL-kernel spec per shard, with that shard's scalar operands
     (localized indices under multi-shard p2p, global ids otherwise)."""
-    from repro.kernels.community_spmm import ell_packed_spec, ell_spec
+    from repro.kernels.community_spmm import (ell_fused_spec,
+                                              ell_packed_spec, ell_spec)
 
     data = tr.data
     if data.ell_blocks is None:
@@ -66,6 +67,13 @@ def _kernel_entries(tr: Any, n_shards: int) -> list[dict]:
                 block_bytes=data.ell_blocks.dtype.itemsize, z_bytes=4)
             scalars = {"ell_offsets8": off8[sl], "ell_mask": msk[sl],
                        "row_counts": rows[sl], "nbr_counts": nbrs[sl]}
+            if getattr(getattr(tr, "config", None), "fused", False):
+                # the fused aggregation→GEMM pass shares the packed
+                # scalars; widest feature pair bounds its VMEM footprint
+                fspec = ell_fused_spec(
+                    k, max_deg, n_pad, c, c, tr._plan.recv_plane_rows,
+                    block_bytes=data.ell_blocks.dtype.itemsize, z_bytes=4)
+                entries.append({"spec": fspec, "scalars": dict(scalars)})
         else:
             spec = ell_spec(k, max_deg, n_pad, c, z_lanes,
                             block_bytes=data.ell_blocks.dtype.itemsize,
@@ -139,6 +147,16 @@ def trainer_expectations(tr: Any) -> dict[str, Any]:
                                and tr._plan is not None)
     if exp["state_packed"]:
         exp["packed_rows_bound"] = int(tr._plan.r_pad)
+    # fused aggregation→GEMM: only the W-update may hand an aggregated
+    # block stack to a dot (its line search re-evaluates the GEMM under a
+    # varying W) — one aggregate per layer; every Z-update site must run
+    # the fused/reassociated form.  Like state_packed, only meaningful
+    # when the packed plane feeds the wire.
+    exp["fused"] = bool(exp["state_packed"]
+                        and getattr(getattr(tr, "config", None),
+                                    "fused", False))
+    if exp["fused"]:
+        exp["fused_max_agg_handoffs"] = int(tr.cfg.num_layers)
     # largest legitimate resident buffers: the adjacency store, the full
     # Z/U state stack, and one gathered payload; anything 4x past their
     # max is a blow-up

@@ -705,6 +705,11 @@ def overlap_stats(plan: NeighborExchange, neighbor_mask: np.ndarray,
         worst_exposed = max(worst_exposed, exposed)
 
     eff = 1.0 - worst_exposed / total if total > 0 else 0.0
+    # scheduled bytes of the priced plan — every pair of every round moves
+    # its rows_pad rows; this is exactly exchange_bytes(plan)["wire_bytes"]
+    # (the per-second totals above price per *round* over one link, so
+    # they are not byte-convertible when a round carries several pairs)
+    wire_rows = sum(len(r.pairs) * r.rows_pad for r in plan.rounds)
     return {
         "enabled": bool(enabled),
         "num_rounds": plan.num_rounds,
@@ -713,6 +718,7 @@ def overlap_stats(plan: NeighborExchange, neighbor_mask: np.ndarray,
         "exposed_wire_s": worst_exposed,
         "hidden_wire_s": total - worst_exposed,
         "overlap_efficiency": eff,
+        "total_wire_bytes": int(wire_rows * total_c * itemsize),
         "exposed_wire_bytes": int(worst_exposed * ici_bw),
         "num_gathers": n_gathers,
         "model": {"peak_flops": peak_flops, "ici_bw": ici_bw,

@@ -274,6 +274,19 @@ class TrainerConfig:
     (subproblems.stale_weights).  ``batch_fraction=1.0`` samples every
     shard every round and is bitwise-identical to the full-batch packed
     trainer; ``None`` (the default) builds no sampling machinery at all.
+    Sampling composes with ``overlap=True``: each compiled batch derives
+    its arrival-group schedule from its own restricted sub-plan.
+
+    ``fused=True`` (requires ``packed``) routes the Z-update sites —
+    target/relay/dual aggregation followed by a GEMM — through the fused
+    aggregation→GEMM path (kernels.ops.community_spmm_ell_fused): the
+    aggregated (k, n_pad, C) stack stays in VMEM scratch (TPU) or is
+    reassociated away (oracle), never materialised in HBM.  The W-update
+    keeps the raw aggregate (its line search re-evaluates the GEMM under
+    a varying W — fusing there would repeat the whole aggregation per
+    backtracking probe).  Inert on 1-shard meshes (no packed wire), where
+    the program is bitwise the unfused one; multi-shard fused-vs-unfused
+    parity is dot-reassociation tolerance.
     """
     compressed: bool = False
     transport: "str | None" = None
@@ -281,6 +294,7 @@ class TrainerConfig:
     pad_mode: str = "bucketed"
     packed: bool = False
     overlap: bool = False
+    fused: bool = False
     comm_bf16: bool = False
     adjacency_bf16: bool = False
     use_kernel: bool = False
@@ -311,6 +325,10 @@ class TrainerConfig:
         if self.overlap and not self.packed:
             raise ValueError("overlap=True requires packed=True — the "
                              "staged exchange snapshots are packed planes")
+        if self.fused and not self.packed:
+            raise ValueError("fused=True requires packed=True — the fused "
+                             "aggregation→GEMM kernel reads the packed "
+                             "receive plane through ELL offsets")
         if self.pad_mode not in ("global", "bucketed"):
             raise ValueError(f"unknown pad_mode {self.pad_mode!r}; "
                              f"expected 'global' or 'bucketed'")
@@ -324,11 +342,6 @@ class TrainerConfig:
                 raise ValueError("batch_fraction requires packed=True — "
                                  "the sampled sweep runs on the sampled "
                                  "shards' packed planes")
-            if self.overlap:
-                raise ValueError("batch_fraction is incompatible with "
-                                 "overlap=True — the arrival-group "
-                                 "schedule is derived from the full round "
-                                 "schedule, not a sampled sub-plan")
         if not 0.0 < self.stale_decay <= 1.0:
             raise ValueError(f"stale_decay must be in (0, 1], got "
                              f"{self.stale_decay!r}")
@@ -518,7 +531,8 @@ def fista_lanes(admm: ADMMConfig, b, u, labels, mask, z_init, denom):
 def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
                     comm_bf16: bool, compressed: bool,
                     plan: "messages.NeighborExchange | None",
-                    overlap: bool, packed_aux: "dict | None",
+                    overlap: bool, fused: bool,
+                    packed_aux: "dict | None",
                     mb_aux: "dict | None",
                     adj, nbr_row, z0_loc, labels_loc, mask_loc, denom,
                     ws, zs_loc, u_loc, taus, thetas, nbr_decay=None):
@@ -680,6 +694,41 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
         def rowagg(x):
             return agg_blocked(x[0])
 
+    # ``rowagg_mm(x, w)`` is the aggregation→GEMM composite the Z-update
+    # sites consume.  Unfused it is literally ``rowagg(x) @ w`` (bitwise
+    # the historic program); fused on the packed wire it runs the one-pass
+    # kernel / the reassociated A·(Z·W) oracle, so the aggregated
+    # (k, n, C_in) stack never exists outside VMEM scratch.  Overlap
+    # composes by linearity: (Σ_g agg_g) @ W == Σ_g (agg_g @ W), each
+    # arrival group's fused call depending only on its own stage buffer.
+    if packed_wire and fused:
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            def agg_plane_mm(plane, msk, w):
+                return kops.community_spmm_ell_fused(
+                    ell_rows, off_lanes, msk, plane, w, ell_rcnt, ell_ncnt)
+        else:
+            def agg_plane_mm(plane, msk, w):
+                # reassociated oracle: pre-multiplying the packed plane
+                # keeps the compiled CPU program aggregate-free too
+                return agg_plane(plane @ w, msk)
+
+        if overlap:
+            def rowagg_mm(x, w):
+                stages = x[0]
+                acc = agg_plane_mm(stages[0], ell_f * (grp_lanes == 0), w)
+                for gi in range(1, len(stages)):
+                    acc = acc + agg_plane_mm(stages[gi],
+                                             ell_f * (grp_lanes == gi), w)
+                return acc
+        else:
+            def rowagg_mm(x, w):
+                return agg_plane_mm(x[0], ell_f, w)
+    else:
+        def rowagg_mm(x, w):
+            return rowagg(x) @ w
+
     if packed_wire:
         ru_tbl = jnp.asarray(packed_aux["recv_unpack"])[sid0]  # (r_pad·n,)
 
@@ -759,9 +808,9 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     new_zs, new_thetas = [], []
     for l in range(1, num_layers):              # hidden layers (eq. 5/6)
         w_l, w_next = new_ws[l - 1], new_ws[l]
-        target1 = f(rowagg(zh_in[l - 1]) @ w_l)              # (k, n, C_l)
+        target1 = f(rowagg_mm(zh_in[l - 1], w_l))            # (k, n, C_l)
         # relay aggregates q_{l,r} (eq. 4 second-order payload), all r
-        q_loc = rowagg(zh[l - 1]) @ w_next                   # (k, n, C_next)
+        q_loc = rowagg_mm(zh[l - 1], w_next)                 # (k, n, C_next)
         q_all = gather(q_loc)[1]                             # blocked rows
         z_ref = zs_loc[l - 1]
 
@@ -840,7 +889,7 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
         new_thetas.append(theta)
 
     # ---- Z_L: per-community FISTA prox (eq. 7) ----
-    b = rowagg(zh_in[num_layers - 1]) @ new_ws[-1]
+    b = rowagg_mm(zh_in[num_layers - 1], new_ws[-1])
     z_last = fista_lanes(admm, b, u_loc, labels_loc, mask_loc,
                          zs_loc[-1], denom)
     if smask_b is not None:
@@ -851,7 +900,7 @@ def _iteration_body(cfg: gcn.GCNConfig, admm: ADMMConfig, use_kernel: bool,
     # ---- Line 5: dual ascent (eq. 3) with updated iterates ----
     zh_pen_new = gather(new_zs[num_layers - 2]) if num_layers >= 2 \
         else zh0
-    b_new = rowagg(zh_pen_new) @ new_ws[-1]
+    b_new = rowagg_mm(zh_pen_new, new_ws[-1])
     new_u = u_loc + admm.rho * (new_zs[-1] - b_new)
     if smask_b is not None:
         new_u = jnp.where(smask_b[:, None, None], new_u, u_loc)
@@ -902,6 +951,7 @@ class ParallelADMMTrainer:
         self.transport = transport = config.transport
         self.packed = packed = config.packed
         self.overlap = overlap = config.overlap
+        self.fused = fused = config.fused
         self.pad_mode = pad_mode = config.pad_mode
         use_kernel = config.use_kernel
         comm_bf16 = config.comm_bf16
@@ -1008,20 +1058,15 @@ class ParallelADMMTrainer:
                         csr.ell_indices, csr.ell_mask)).reshape(
                     n_shards, dl.lanes_per_shard, -1)
                 if overlap_on:
-                    # ELL slot -> arrival group: 0 = resident own lanes
-                    # (aggregable before any wire), g = delivered by
-                    # ppermute round g-1
-                    arr = messages.arrival_rounds(self._plan)
-                    loc = np.asarray(self._plan.localize_indices(
+                    # host tables the per-step arrival-group computation
+                    # needs: slot layout is plan-stable (restrict_exchange
+                    # never touches buffer geometry), so the localized
+                    # slots are computed once against the full plan
+                    ov_loc = np.asarray(self._plan.localize_indices(
                         csr.ell_indices, csr.ell_mask)).reshape(
                         n_shards, dl.lanes_per_shard, -1)
-                    msk = np.asarray(csr.ell_mask).reshape(
+                    ov_msk = np.asarray(csr.ell_mask).reshape(
                         n_shards, dl.lanes_per_shard, -1)
-                    grp = np.zeros_like(loc)
-                    for s in range(n_shards):
-                        grp[s] = np.where(msk[s] != 0,
-                                          arr[s][loc[s]] + 1, 0)
-                    packed_aux["groups"] = grp
 
         sharded, rep = P(AXIS), P()
         n_l = cfg.num_layers
@@ -1058,9 +1103,26 @@ class ParallelADMMTrainer:
                 smask = np.zeros((n_shards, k_lanes), dtype=np.float32)
                 smask[sorted(sampled)] = 1.0
                 mb_aux = {"smask": smask}
+            step_aux = packed_aux
+            if overlap_on:
+                # ELL slot -> arrival group of the *active* schedule:
+                # 0 = resident own lanes (aggregable before any wire),
+                # g = delivered by this plan's ppermute round g-1.  A
+                # restricted sub-plan delivers fewer slots (and possibly
+                # fewer rounds) than the full plan, so the table is
+                # derived per compiled batch — slots the sub-schedule
+                # never delivers fall into group 0, aggregate the
+                # own-copy stage's zero rows, and only reach unsampled
+                # lanes' iterates, which the smask gates freeze anyway.
+                arr = messages.arrival_rounds(step_plan)
+                grp = np.zeros_like(ov_loc)
+                for s in range(n_shards):
+                    grp[s] = np.where(ov_msk[s] != 0,
+                                      arr[s][ov_loc[s]] + 1, 0)
+                step_aux = dict(packed_aux, groups=grp)
             body = partial(_iteration_body, cfg, admm, use_kernel,
                            comm_bf16, compressed, step_plan, overlap_on,
-                           packed_aux, mb_aux)
+                           fused, step_aux, mb_aux)
             in_specs = (adj_spec, sharded, sharded, sharded, sharded, rep,
                         (rep,) * n_l, (sharded,) * n_l, sharded,
                         (rep,) * n_l, (sharded,) * n_l)
@@ -1208,11 +1270,18 @@ class ParallelADMMTrainer:
             "strided_equiv_bytes": int(strided_rows * (state_cols + 3) * 4),
         }
         if self._plan is not None:
-            # analytic overlap efficiency of the round schedule — consumed
-            # by benchmarks.roofline's exposed-wire pricing
-            self.comm_stats["overlap"] = messages.overlap_stats(
-                self._plan, self.layout.neighbor_mask, gathered_cs,
-                itemsize=2 if comm_bf16 else 4, enabled=overlap_on)
+            # analytic overlap efficiency of the *active* round schedule —
+            # consumed by benchmarks.roofline's exposed-wire pricing.
+            # Under minibatching the compiled step runs the restricted
+            # sub-plan, so that is what gets priced (the full plan would
+            # overstate a sampled round's wire); ``step()`` re-prices when
+            # the active batch changes.
+            def _overlap_pricing(plan):
+                return messages.overlap_stats(
+                    plan, self.layout.neighbor_mask, gathered_cs,
+                    itemsize=2 if comm_bf16 else 4, enabled=overlap_on)
+            self._overlap_pricing = _overlap_pricing
+            self.comm_stats["overlap"] = _overlap_pricing(self._active_plan)
         if self._sampler is None:
             self.comm_stats["minibatch"] = {"enabled": False}
         else:
@@ -1368,6 +1437,10 @@ class ParallelADMMTrainer:
         step_fn, plan = self._step_for(shards)
         self._step = step_fn
         self._active_plan = plan if plan is not None else self._plan
+        if "overlap" in self.comm_stats:
+            # keep the overlap pricing tied to the plan this round runs
+            self.comm_stats["overlap"] = self._overlap_pricing(
+                self._active_plan)
         self.state = step_fn(self.state, self._nbr_decay())
         # ages advance after the round: a community sampled this round
         # ends it fresh (age 0 — "reset on resample"), everyone else's

@@ -157,6 +157,52 @@ def ell_spec(k: int, max_deg: int, n_pad: int, c: int, m_total: int, *,
                          "row_counts", "nbr_counts"))
 
 
+def ell_fused_spec(k: int, max_deg: int, n_pad: int, c_in: int, c_out: int,
+                   plane_rows: int, *,
+                   tile_n: int = DEFAULT_TILE_N,
+                   block_bytes: int = 4, z_bytes: int = 4) -> KernelSpec:
+    """Spec for the fused aggregation→GEMM kernel.
+
+    Same packed-plane machinery as ``ell_packed_spec`` — the Z DMA reads
+    the (plane_rows, C_in) receive plane at the scalar-prefetched 8-row
+    offsets — but the grid carries no feature-tile axis: the whole
+    (tile_n, C_in) aggregated block accumulates in VMEM scratch across
+    the (d, p) reduction steps, and at the last step the per-community
+    Z-update GEMM against the VMEM-resident ``w`` block writes the
+    (tile_n, C_out) output directly.  The aggregated stack exists only
+    as that scratch tile — it never round-trips HBM (GCN feature dims
+    are small, so the un-tiled C axes stay well inside the VMEM budget;
+    ``repro.analysis.rules.pallas.check_kernel_vmem`` proves it against
+    this spec).
+    """
+    tile_n = _shrink(n_pad, tile_n)
+    tile_p = 8
+    zb = plane_rows // tile_p
+    return KernelSpec(
+        name="community_spmm_ell_fused",
+        grid=(k, n_pad // tile_n, max_deg, n_pad // tile_p),
+        operands=(
+            BlockOperand("ell_blocks", (k, max_deg, n_pad, n_pad),
+                         (None, None, tile_n, tile_p),
+                         lambda m, i, d, p, off8, msk, rows, nbr:
+                         (m, d, i, p), block_bytes),
+            BlockOperand("z_plane", (plane_rows, c_in),
+                         (tile_p, c_in),
+                         lambda m, i, d, p, off8, msk, rows, nbr:
+                         (jnp.minimum(off8[m, d] + p, zb - 1), 0), z_bytes,
+                         gather_scalar="ell_offsets8"),
+            BlockOperand("w", (c_in, c_out), (c_in, c_out),
+                         lambda m, i, d, p, off8, msk, rows, nbr:
+                         (0, 0), z_bytes),
+            BlockOperand("out", (k, n_pad, c_out), (None, tile_n, c_out),
+                         lambda m, i, d, p, off8, msk, rows, nbr:
+                         (m, i, 0), z_bytes),
+        ),
+        scratch_bytes=tile_n * c_in * 4,
+        scalar_prefetch=("ell_offsets8", "ell_mask",
+                         "row_counts", "nbr_counts"))
+
+
 def ell_packed_spec(k: int, max_deg: int, n_pad: int, c: int,
                     plane_rows: int, *,
                     tile_n: int = DEFAULT_TILE_N, tile_c: int = DEFAULT_TILE_C,
@@ -430,3 +476,110 @@ def community_spmm_ell_packed(ell_blocks: jax.Array, ell_offsets: jax.Array,
     )(off8.astype(jnp.int32), ell_mask.astype(jnp.int32),
       row_counts.astype(jnp.int32), nbr_counts.astype(jnp.int32),
       ell_blocks, z_plane)
+
+
+# ---------------------------------------------------------------------------
+# Fused aggregation→Z-update: one pass computes (Σ_d Ã[m,d] Z_d) @ W with
+# the aggregated (tile_n, C_in) block held in VMEM scratch the whole time.
+#
+# The unfused pipeline runs the packed ELL aggregation and the Z-update
+# GEMM as two XLA calls, writing the (k, n_pad, C_in) aggregate to HBM
+# between them and reading it straight back.  Here the grid drops the
+# feature-tile axis (GCN feature dims are narrow), the reduction over
+# (d, p) accumulates into the same f32 scratch as the packed kernel — so
+# the aggregate is *bitwise* the packed kernel's — and the final grid
+# step applies the GEMM against the VMEM-resident W block and writes the
+# (tile_n, C_out) result.  The aggregate never exists in HBM; the
+# ``memory/fused-no-intermediate`` analysis rule proves the compiled
+# trainer step keeps it that way.
+# ---------------------------------------------------------------------------
+
+
+def _spmm_ell_fused_kernel(off_ref, msk_ref, rows_ref, nbr_ref, a_ref,
+                           z_ref, w_ref, o_ref, agg_scr, *,
+                           tile_n: int, tile_p: int):
+    m = pl.program_id(0)
+    i = pl.program_id(1)
+    d = pl.program_id(2)
+    p = pl.program_id(3)
+    n_d = pl.num_programs(2)
+    n_p = pl.num_programs(3)
+
+    @pl.when((d == 0) & (p == 0))
+    def _init():
+        agg_scr[...] = jnp.zeros_like(agg_scr)
+
+    live = ((msk_ref[m, d] != 0)
+            & (i * tile_n < rows_ref[m])         # output rows are real
+            & (p * tile_p < nbr_ref[m, d]))      # neighbour rows are real
+
+    @pl.when(live)
+    def _accum():
+        a = a_ref[...].astype(jnp.float32)       # (tile_n, tile_p)
+        z = z_ref[...].astype(jnp.float32)       # (tile_p, c_in)
+        agg_scr[...] += jnp.dot(a, z, preferred_element_type=jnp.float32)
+
+    @pl.when((d == n_d - 1) & (p == n_p - 1))
+    def _write():
+        w = w_ref[...].astype(jnp.float32)       # (c_in, c_out)
+        o_ref[...] = jnp.dot(agg_scr[...], w,
+                             preferred_element_type=jnp.float32
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def community_spmm_ell_fused(ell_blocks: jax.Array, ell_offsets: jax.Array,
+                             ell_mask: jax.Array, z_plane: jax.Array,
+                             w: jax.Array,
+                             row_counts: jax.Array,
+                             nbr_counts: jax.Array,
+                             *, tile_n: int = DEFAULT_TILE_N,
+                             interpret: bool = False) -> jax.Array:
+    """(Σ_d mask[m,d] · blocks[m,d] @ plane[off[m,d]:...]) @ W in one pass.
+
+    Operands are exactly ``community_spmm_ell_packed``'s plus the
+    (C_in, C_out) Z-update weight block ``w``.  The aggregation
+    accumulates in the same order (and the same f32 scratch) as the
+    packed kernel — the intermediate aggregate is bitwise the unfused
+    kernel's — and the closing GEMM is one f32 dot per output tile, so
+    fused-vs-unfused *outputs* agree to dot-reassociation tolerance
+    (~1e-6 at GCN widths), not bitwise: XLA is free to split the unfused
+    ``agg @ w`` contraction differently.  Returns (k, n_pad, C_out) with
+    rows past ``row_counts`` zero.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    k, max_deg, n_pad, _ = ell_blocks.shape
+    plane_rows, c_in = z_plane.shape
+    c_out = w.shape[-1]
+    spec = ell_fused_spec(k, max_deg, n_pad, c_in, c_out, plane_rows,
+                          tile_n=tile_n,
+                          block_bytes=ell_blocks.dtype.itemsize,
+                          z_bytes=z_plane.dtype.itemsize)
+    a_op, z_op, w_op, out_op = spec.operands
+    eff_tile_n = out_op.block_shape[1]
+
+    # 8-row-unit offsets; masked slots pinned at 0 so every prefetched
+    # value indexes inside the plane (the linter bounds the value range)
+    off8 = jnp.where(ell_mask != 0, ell_offsets // 8, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,   # offsets8, ell_mask, rows, nbrs (SMEM)
+        grid=spec.grid,
+        in_specs=[
+            pl.BlockSpec(a_op.block_shape, a_op.index_map),
+            pl.BlockSpec(z_op.block_shape, z_op.index_map),
+            pl.BlockSpec(w_op.block_shape, w_op.index_map),
+        ],
+        out_specs=pl.BlockSpec(out_op.block_shape, out_op.index_map),
+        scratch_shapes=[_vmem_scratch((eff_tile_n, c_in))],
+    )
+    return pl.pallas_call(
+        functools.partial(_spmm_ell_fused_kernel, tile_n=eff_tile_n,
+                          tile_p=8),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(out_op.array_shape, z_plane.dtype),
+        interpret=interpret,
+    )(off8.astype(jnp.int32), ell_mask.astype(jnp.int32),
+      row_counts.astype(jnp.int32), nbr_counts.astype(jnp.int32),
+      ell_blocks, z_plane, w)

@@ -18,6 +18,9 @@ from repro.kernels import ref
 from repro.kernels.community_spmm import community_spmm as _spmm_kernel
 from repro.kernels.community_spmm import community_spmm_ell as _spmm_ell_kernel
 from repro.kernels.community_spmm import (
+    community_spmm_ell_fused as _spmm_ell_fused_kernel,
+)
+from repro.kernels.community_spmm import (
     community_spmm_ell_packed as _spmm_ell_packed_kernel,
 )
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
@@ -116,6 +119,33 @@ def community_spmm_ell_packed(ell_blocks: jax.Array, ell_offsets: jax.Array,
     return ref.community_spmm_ell_packed_einsum(ell_blocks, ell_offsets,
                                                 ell_mask, z_plane,
                                                 row_counts, nbr_counts)
+
+
+def community_spmm_ell_fused(ell_blocks: jax.Array, ell_offsets: jax.Array,
+                             ell_mask: jax.Array, z_plane: jax.Array,
+                             w: jax.Array,
+                             row_counts: jax.Array,
+                             nbr_counts: jax.Array) -> jax.Array:
+    """Fused packed-plane aggregation → Z-update GEMM in one Pallas pass.
+
+    Same operands as ``community_spmm_ell_packed`` plus the (C_in, C_out)
+    weight block: the aggregated (tile_n, C_in) block stays in VMEM
+    scratch and the GEMM closes the pass, so the (k, n_pad, C_in)
+    aggregate never touches HBM.  The CPU oracle is the *reassociated*
+    form A·(Z·W) — also aggregate-free — so every dispatch target keeps
+    the no-intermediate property; parity with the unfused two-call
+    pipeline is tolerance-level (dot reassociation), not bitwise.
+    """
+    if _on_tpu():
+        return _spmm_ell_fused_kernel(ell_blocks, ell_offsets, ell_mask,
+                                      z_plane, w, row_counts, nbr_counts)
+    if _FORCE_INTERPRET:
+        return _spmm_ell_fused_kernel(ell_blocks, ell_offsets, ell_mask,
+                                      z_plane, w, row_counts, nbr_counts,
+                                      interpret=True)
+    return ref.community_spmm_ell_fused_einsum(ell_blocks, ell_offsets,
+                                               ell_mask, z_plane, w,
+                                               row_counts, nbr_counts)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

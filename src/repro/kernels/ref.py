@@ -72,6 +72,31 @@ def community_spmm_ell_packed_einsum(ell_blocks: jax.Array,
                   < row_counts[:, None, None]).astype(out.dtype)
 
 
+def community_spmm_ell_fused_einsum(ell_blocks: jax.Array,
+                                    ell_offsets: jax.Array,
+                                    ell_mask: jax.Array,
+                                    z_plane: jax.Array,
+                                    w: jax.Array,
+                                    row_counts: jax.Array,
+                                    nbr_counts: jax.Array) -> jax.Array:
+    """Oracle for the fused aggregation→GEMM kernel: (A·Z)·W = A·(Z·W).
+
+    Deliberately *reassociated*: the (C_in, C_out) weight is applied to
+    the packed plane first, then the packed aggregation runs on the
+    pre-multiplied plane — so the CPU-dispatch program, like the TPU
+    kernel, never materialises the aggregated (k, n_pad, C_in) stack
+    (the ``memory/fused-no-intermediate`` rule checks both forms of the
+    compiled step).  The reassociation means parity with the unfused
+    pipeline is dot-reassociation tolerance (~1e-6 at GCN widths), not
+    bitwise — same contract the kernel documents.
+    """
+    zw = (z_plane.astype(jnp.float32)
+          @ w.astype(jnp.float32)).astype(z_plane.dtype)
+    return community_spmm_ell_packed_einsum(ell_blocks, ell_offsets,
+                                            ell_mask, zw, row_counts,
+                                            nbr_counts)
+
+
 def community_spmm_ell_ref(ell_blocks: jax.Array, ell_indices: jax.Array,
                            ell_mask: jax.Array, z_all: jax.Array,
                            row_counts: jax.Array | None = None,

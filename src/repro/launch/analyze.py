@@ -45,6 +45,12 @@ QUICK_CONFIGS = [
     # restricted sub-plan's — no collective touches an unsampled shard pair
     {"name": "p2p_minibatch", "transport": "p2p", "pad_mode": "bucketed",
      "packed": True, "batch_fraction": 0.5, "stale_decay": 0.5},
+    # fused aggregation→Z-update: memory/fused-no-intermediate proves the
+    # compiled step hands no aggregated (k, n_pad, C) stack to a GEMM
+    # beyond the W-update line-search allowance, and the pallas VMEM rule
+    # covers the fused spec's scratch-resident aggregate
+    {"name": "p2p_fused", "transport": "p2p", "pad_mode": "bucketed",
+     "packed": True, "fused": True},
 ]
 FULL_CONFIGS = QUICK_CONFIGS + [
     {"name": "dense_allgather", "transport": "allgather",

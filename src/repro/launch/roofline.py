@@ -24,7 +24,7 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
 __all__ = [
     "COLLECTIVE_OPS", "Census", "Computation", "Instr", "collective_bytes",
     "hlo_census", "parse_hlo", "roofline_terms", "analytic_hbm_bytes",
-    "model_flops",
+    "fused_agg_traffic", "model_flops",
 ]
 
 
@@ -51,6 +51,31 @@ def roofline_terms(flops: float, hbm_bytes: float, collective_total: float,
     terms["dominant"] = max(("compute_s", "memory_s", "collective_s"),
                             key=lambda k: terms[k])
     return terms
+
+
+def fused_agg_traffic(agg_rows: int, site_dims, itemsize: int = 4
+                      ) -> dict[str, Any]:
+    """HBM traffic of the aggregation→GEMM intermediates, per shard per
+    iteration, for the fused-vs-unfused comparison (BENCH_speedup's
+    ``m32_fused`` section).
+
+    ``agg_rows`` is the row count of each aggregated ``(k, n_pad, C)``
+    stack (k·n_pad per shard); ``site_dims`` lists one ``(c_in, c_out)``
+    pair per aggregation→GEMM site the fused kernel covers (the Z-update
+    targets — NOT the W-update line-search aggregates, which both paths
+    materialise).  Unfused, every site writes its aggregate to HBM and
+    the GEMM reads it back: 2·rows·c_in·itemsize each.  Fused, the
+    aggregate lives in VMEM scratch: zero HBM bytes — only the GEMM
+    output (identical in both paths) ever lands.
+    """
+    unfused = sum(2 * agg_rows * c_in * itemsize for c_in, _ in site_dims)
+    gemm_out = sum(agg_rows * c_out * itemsize for _, c_out in site_dims)
+    return {"agg_rows": int(agg_rows),
+            "sites": len(list(site_dims)),
+            "itemsize": int(itemsize),
+            "unfused_intermediate_bytes": int(unfused),
+            "fused_intermediate_bytes": 0,
+            "gemm_out_bytes": int(gemm_out)}
 
 
 def analytic_hbm_bytes(cfg, shape, step: str, chips: int,

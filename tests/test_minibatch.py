@@ -134,6 +134,100 @@ def test_restrict_exchange_validates():
         messages.restrict_exchange(plan, {0, 7})
 
 
+def _layout_and_plan(seed=0, skew=0.8, n_shards=4, packed=True):
+    g, part = _skewed(seed=seed, skew=skew)
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True,
+                                          pad_mode="bucketed")
+    plan = messages.build_neighbor_exchange(
+        layout.neighbor_mask, n_shards, layout.n_pad,
+        sizes=layout.sizes,
+        row_counts=layout.eff_row_counts() if packed else None)
+    return layout, plan
+
+
+def test_restrict_exchange_geometry_fuzz():
+    """Seeded randomized sweep (hypothesis-free) over graphs, shard
+    counts, plan modes and sampled sets.  The load-bearing invariant is
+    destination-additivity: every pair has exactly one destination, so
+    the sub-plan's true rows (and needed bytes) must equal the sum over
+    the singleton restrictions — round padding is the only non-additive
+    quantity, and it only ever shrinks."""
+    rng = np.random.default_rng(1234)
+    for trial in range(8):
+        seed = int(rng.integers(0, 100))
+        skew = float(rng.uniform(0.0, 1.2))
+        n_shards = int(rng.choice([2, 4, 8]))
+        packed = bool(rng.integers(0, 2))
+        _, plan = _layout_and_plan(seed=seed, skew=skew,
+                                   n_shards=n_shards, packed=packed)
+        full_pairs = {p for r in plan.rounds for p in r.pairs}
+        full_eb = messages.exchange_bytes(plan, [8])
+        singles = {d: messages.restrict_exchange(plan, {d})
+                   for d in range(n_shards)}
+        for _ in range(4):
+            k = int(rng.integers(1, n_shards + 1))
+            sampled = set(int(s) for s in
+                          rng.choice(n_shards, size=k, replace=False))
+            sub = messages.restrict_exchange(plan, sampled)
+            # pairs are exactly the full set filtered by destination
+            sub_pairs = {p for r in sub.rounds for p in r.pairs}
+            assert sub_pairs == {p for p in full_pairs
+                                 if p[1] in sampled}, (trial, sampled)
+            # geometry untouched: localized indices stay valid
+            assert sub.r_pad == plan.r_pad
+            assert sub.n_pad == plan.n_pad
+            assert sub.needed_ids == plan.needed_ids
+            assert sub.row_counts == plan.row_counts
+            assert sub.plane_rows == plan.plane_rows
+            assert sub.recv_plane_rows == plan.recv_plane_rows
+            # rounds only shrink: pad rows bounded by the source round,
+            # slot tables trimmed to the surviving pad width
+            by_off = {r.offset: r for r in plan.rounds}
+            for r in sub.rounds:
+                src = by_off[r.offset]
+                assert 0 < r.rows_pad <= src.rows_pad
+                assert r.send_idx.shape[1] == r.rows_pad
+                assert r.recv_slot.shape[1] == r.rows_pad
+            # destination-additivity of the true (padding-free) rows
+            eb = messages.exchange_bytes(sub, [8])
+            assert eb["true_rows"] == sum(
+                messages.exchange_bytes(singles[d], [8])["true_rows"]
+                for d in sampled), (trial, sampled)
+            assert eb["wire_bytes"] == \
+                eb["p2p_needed_bytes"] + eb["padding_bytes"]
+            assert eb["wire_bytes"] <= full_eb["wire_bytes"]
+            # arrival groups of the sub-schedule stay in range
+            arr = messages.arrival_rounds(sub)
+            assert arr.min() >= -1
+            assert arr.max() < max(sub.num_rounds, 1)
+
+
+def test_overlap_stats_price_the_restricted_plan():
+    """`overlap_stats` on a restricted sub-plan must price exactly that
+    sub-plan's scheduled wire: `total_wire_bytes` equals
+    `exchange_bytes(sub)["wire_bytes"]` for any payload widths, and the
+    exposed share never exceeds the total."""
+    layout, plan = _layout_and_plan()
+    nbr = layout.neighbor_mask
+    for sampled in ({0}, {1, 3}, {0, 2, 3}, {0, 1, 2, 3}):
+        sub = messages.restrict_exchange(plan, sampled)
+        for cs in ([8], [8, 8, 4], [8, 8, 4, 4, 8, 4, 8]):
+            ov = messages.overlap_stats(sub, nbr, cs, enabled=True)
+            eb = messages.exchange_bytes(sub, cs)
+            assert ov["total_wire_bytes"] == eb["wire_bytes"]
+            assert ov["exposed_wire_bytes"] <= ov["total_wire_bytes"]
+            assert -1e-9 <= ov["exposed_wire_s"] \
+                <= ov["total_wire_s"] + 1e-9
+            assert 0.0 <= ov["overlap_efficiency"] <= 1.0
+            assert ov["num_groups"] == sub.num_rounds + 1
+        # a strict restriction prices strictly less wire than the plan
+        if len(sampled) < plan.n_shards:
+            full = messages.overlap_stats(plan, nbr, [8], enabled=True)
+            rst = messages.overlap_stats(sub, nbr, [8], enabled=True)
+            assert rst["total_wire_bytes"] < full["total_wire_bytes"]
+
+
 # ---------------------------------------------------------------------------
 # the staleness weight
 # ---------------------------------------------------------------------------
@@ -295,4 +389,83 @@ def test_minibatch_on_4_shards():
                          timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     for tag in ("MB_BITWISE_OK", "MB_SAMPLED_OK", "MB_ANALYSIS_OK"):
+        assert tag in out.stdout, out.stdout
+
+
+# ---------------------------------------------------------------------------
+# 4-shard subprocess: overlap composes with sampling — per-sub-plan
+# arrival groups, tolerance parity, and per-step overlap re-pricing
+# ---------------------------------------------------------------------------
+
+_OV_WORKER = r"""
+import numpy as np, jax
+import jax.numpy as jnp
+from repro.analysis.trainer import _gathered_cs
+from repro.core import gcn, graph, messages
+from repro.core.parallel import AXIS, ParallelADMMTrainer, TrainerConfig
+from repro.core.subproblems import ADMMConfig
+from repro.util.compat import make_mesh
+
+g, part = graph.synthetic_powerlaw_communities(
+    num_parts=8, nodes_per_part=12, attach=1, seed=0, feat_dim=8,
+    size_skew=0.8)
+cfg = gcn.GCNConfig(layer_dims=(8, 8, g.num_classes))
+admm = ADMMConfig(nu=1e-3, rho=1e-3)
+mesh = make_mesh((4,), (AXIS,), devices=jax.devices()[:4])
+
+def build(config):
+    return ParallelADMMTrainer(cfg, admm, g, num_parts=8, seed=0,
+                               part=part, mesh=mesh, config=config)
+
+# --- overlap=True now composes with batch_fraction < 1 ---
+mb = build(TrainerConfig.minibatch(batch_fraction=0.5))
+ov = build(TrainerConfig.minibatch(batch_fraction=0.5, overlap=True))
+lag0 = float(ov._lagrangian(ov.state))
+for _ in range(8):
+    mb.step(); ov.step()
+lag = float(ov._lagrangian(ov.state))
+assert lag < lag0, (lag0, lag)
+
+# same sample_seed -> same schedule; overlap only regroups the neighbour
+# sum per arrival round, so the trajectories agree to summation-order
+# tolerance
+def delta(a, b):
+    return max(
+        max(float(jnp.max(jnp.abs(x - y)))
+            for x, y in zip(a.weights, b.weights)),
+        max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(a.zs, b.zs)),
+        float(jnp.max(jnp.abs(a.u - b.u))))
+d = delta(mb.state, ov.state)
+assert d <= 1e-4, f"overlap x minibatch parity {d}"
+print("OV_MB_PARITY_OK")
+
+# --- comm_stats["overlap"] prices the ACTIVE restricted plan ---
+st = ov.comm_stats["overlap"]
+assert st["enabled"] is True
+sub = ov._active_plan
+sub_pairs = {p for r in sub.rounds for p in r.pairs}
+full_pairs = {p for r in ov._plan.rounds for p in r.pairs}
+assert sub_pairs < full_pairs          # a strict sub-schedule is active
+eb = messages.exchange_bytes(sub, _gathered_cs(ov.cfg))
+assert st["total_wire_bytes"] == eb["wire_bytes"], (st, eb)
+assert st["exposed_wire_bytes"] <= st["total_wire_bytes"]
+assert st["num_groups"] == sub.num_rounds + 1
+print("OV_MB_PRICED_OK")
+"""
+
+
+def test_overlap_composes_with_minibatch_on_4_shards():
+    """overlap=True + batch_fraction=0.5 trains (Lagrangian descends),
+    stays within summation-order tolerance of the non-overlap sampled
+    trainer, and `comm_stats["overlap"]` re-prices the active restricted
+    sub-plan — its total equals that sub-plan's `exchange_bytes` wire,
+    with the exposed share bounded by it."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _OV_WORKER],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    for tag in ("OV_MB_PARITY_OK", "OV_MB_PRICED_OK"):
         assert tag in out.stdout, out.stdout

@@ -66,10 +66,6 @@ INVALID = [
     (dict(compressed=True, batch_fraction=0.5),
      "batch_fraction requires packed=True — the sampled sweep runs on "
      "the sampled shards' packed planes"),
-    (dict(compressed=True, packed=True, overlap=True, batch_fraction=0.5),
-     "batch_fraction is incompatible with overlap=True — the "
-     "arrival-group schedule is derived from the full round schedule, "
-     "not a sampled sub-plan"),
     (dict(stale_decay=0.0),
      "stale_decay must be in (0, 1], got 0.0"),
     (dict(stale_decay=1.5),
@@ -123,6 +119,12 @@ def test_presets():
     assert TrainerConfig.minibatch(batch_fraction=0.5).batch_fraction == 0.5
     # presets accept overrides without re-stating the ladder
     assert TrainerConfig.packed(comm_bf16=True).comm_bf16 is True
+    # overlap composes with sampling (per-sub-plan arrival groups) and
+    # with the fused kernel; fused without packed stays rejected
+    ov = TrainerConfig.minibatch(batch_fraction=0.5, overlap=True)
+    assert ov.overlap and ov.batch_fraction == 0.5
+    fu = TrainerConfig.packed(fused=True, overlap=True)
+    assert fu.fused and fu.overlap
 
 
 def test_config_is_frozen():
