@@ -323,9 +323,59 @@ def check_speedup(payload: dict) -> None:
              f"the pinned tolerance {fu['parity_tol']}")
 
 
+def check_serving(payload: dict) -> None:
+    where = "BENCH_serving"
+    _fields(payload, {"quick": bool, "M": int, "num_nodes": int,
+                      "zipf_s": numbers.Real, "batch": int,
+                      "embed_capacity": int, "halo_capacity": int,
+                      "hit": dict, "cold": dict,
+                      "speedup_p50": numbers.Real, "parity": dict,
+                      "hit_path": dict, "stats": dict}, where)
+    _require(payload["M"] == 32, where, "serving bench must be at M=32")
+
+    hit, cold = payload["hit"], payload["cold"]
+    _fields(hit, {"p50_ms": numbers.Real, "p99_ms": numbers.Real,
+                  "qps": numbers.Real, "hit_rate": numbers.Real,
+                  "wire_bytes": int}, f"{where}.hit")
+    _fields(cold, {"p50_ms": numbers.Real, "p99_ms": numbers.Real,
+                   "qps": numbers.Real}, f"{where}.cold")
+    # steady-state Zipf(1.1) traffic must land in cache — the floor the
+    # whole engine exists to clear
+    _require(hit["hit_rate"] >= 0.8, f"{where}.hit",
+             f"steady-state hit rate {hit['hit_rate']} below the 0.8 floor")
+    # tail of the cached path stays under the cold path's *median*
+    _require(hit["p99_ms"] < cold["p50_ms"], where,
+             f"cached p99 {hit['p99_ms']}ms not below the cold-path p50 "
+             f"{cold['p50_ms']}ms")
+    _require(payload["speedup_p50"] >= 5.0, where,
+             f"cached p50 speedup {payload['speedup_p50']}x below the "
+             f"pinned 5x")
+    # the hit path moves nothing over a wire: the compiled gather program
+    # has zero collectives and zero analyze errors
+    _require(hit["wire_bytes"] == 0, f"{where}.hit",
+             f"hit path moves {hit['wire_bytes']} wire bytes")
+    hp = payload["hit_path"]
+    _fields(hp, {"analysis_errors": int, "collectives": int,
+                 "full_graph_rows_bound": int}, f"{where}.hit_path")
+    _require(hp["collectives"] == 0, f"{where}.hit_path",
+             f"{hp['collectives']} collective(s) in the compiled hit path")
+    _require(hp["analysis_errors"] == 0, f"{where}.hit_path",
+             f"{hp['analysis_errors']} analyze error(s) on the hit path")
+    # cache-disabled baseline runs the same compiled programs: parity is
+    # bitwise, not approximate
+    par = payload["parity"]
+    _fields(par, {"bitwise_equal": bool, "max_delta": numbers.Real,
+                  "nodes": int}, f"{where}.parity")
+    _require(par["bitwise_equal"] and par["max_delta"] == 0,
+             f"{where}.parity",
+             f"cached vs cache-disabled embeddings differ "
+             f"(max_delta={par['max_delta']})")
+
+
 CHECKS = {
     "BENCH_block_sparsity.json": check_block_sparsity,
     "BENCH_speedup.json": check_speedup,
+    "BENCH_serving.json": check_serving,
 }
 
 

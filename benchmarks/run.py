@@ -11,9 +11,10 @@ results/bench/*.json.
 Run everything: ``PYTHONPATH=src python -m benchmarks.run``
 Subset:         ``... -m benchmarks.run --only table3_speedup,roofline``
 CI smoke:       ``... benchmarks/run.py --quick`` — emits the repo-root
-``BENCH_block_sparsity.json`` / ``BENCH_speedup.json`` quick payloads and
-validates them with benchmarks/check_bench.py (schema + the compressed-vs-
-dense adjacency and p2p-vs-allgather wire-byte regression guards).
+``BENCH_block_sparsity.json`` / ``BENCH_speedup.json`` / ``BENCH_serving.json``
+quick payloads and validates them with benchmarks/check_bench.py (schema +
+the compressed-vs-dense adjacency, p2p-vs-allgather wire-byte, and serving
+hit-rate/latency regression guards).
 """
 from __future__ import annotations
 
@@ -158,9 +159,10 @@ BENCHES = {
 
 def quick() -> None:
     """CI smoke: quick BENCH_*.json emission + schema/regression checks."""
-    from benchmarks import block_sparsity, check_bench, speedup
+    from benchmarks import block_sparsity, check_bench, serving, speedup
     block_sparsity.main(quick=True)
     speedup.main(quick=True)
+    serving.main(quick=True)
     check_bench.main()
 
 

@@ -41,6 +41,32 @@ def no_allgather_under_p2p(ctx: AnalysisContext) -> Iterable[Finding]:
                      "instructions": [i.name for _, i in hits[:8]]})
 
 
+_ALL_COLLECTIVES = ("all-gather", "all-reduce", "collective-permute",
+                    "all-to-all", "reduce-scatter", "collective-broadcast")
+
+
+@rule("collective/zero-collectives")
+def zero_collectives(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Under ``expect_zero_collectives`` the program contains no
+    collective of any kind — the serving hit/recompute paths are
+    single-device programs over one resident plane, so any collective is
+    a sharded-training construct leaking into the serving build."""
+    if ctx.hlo_text is None or \
+            not ctx.expectations.get("expect_zero_collectives"):
+        return
+    hits = [(comp, ins) for base in _ALL_COLLECTIVES
+            for comp, ins in _collective_instrs(ctx, base)]
+    if hits:
+        yield Finding(
+            "collective/zero-collectives", Severity.ERROR,
+            f"{len(hits)} collective op(s) in a program expected to be "
+            f"collective-free (first: %{hits[0][1].name} "
+            f"[{hits[0][1].op}] in {hits[0][0].name})",
+            location=hits[0][1].name,
+            details={"count": len(hits),
+                     "instructions": [i.op for _, i in hits[:8]]})
+
+
 @rule("collective/allreduce-payload")
 def allreduce_payload(ctx: AnalysisContext) -> Iterable[Finding]:
     """Every all-reduce operand stays within ``allreduce_max_bytes``

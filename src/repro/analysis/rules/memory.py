@@ -198,6 +198,31 @@ def hbm_intermediate_budget(ctx: AnalysisContext) -> Iterable[Finding]:
                          "computation": comp.name})
 
 
+@rule("memory/no-full-graph-tensors")
+def no_full_graph_tensors(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Under ``full_graph_rows`` no instruction — parameters included —
+    holds a tensor whose leading dim reaches the full-graph row count.
+    The serving hit path touches one community block and one request-row
+    vector; a full-plane (Σ-bucket-rows) or (N, ...) operand means the
+    program secretly depends on the whole graph and its latency will
+    scale with it."""
+    bound = ctx.expectations.get("full_graph_rows")
+    if ctx.hlo_text is None or not bound:
+        return
+    for comp, ins in ctx.instructions():
+        dims = ins.result_dims
+        if not dims or ins.op == "tuple":
+            continue
+        if dims[0] >= int(bound):
+            yield Finding(
+                "memory/no-full-graph-tensors", Severity.ERROR,
+                f"%{ins.name} ({ins.op}) holds a {list(dims)} tensor — "
+                f"leading dim >= the full-graph row bound {int(bound)}",
+                location=ins.name,
+                details={"shape": list(dims), "bound": int(bound),
+                         "computation": comp.name})
+
+
 @rule("memory/donated-inputs")
 def donated_inputs(ctx: AnalysisContext) -> Iterable[Finding]:
     """The trainer-step jit donates its state (Z/U stacks rebind every

@@ -263,6 +263,44 @@ def shard_neighbor_graph(neighbor_mask: Array, n_shards: int
     return needed, shard_adj
 
 
+def halo_readers(neighbor_mask: Array) -> list[Array]:
+    """Reverse community dependencies: who *reads* each community.
+
+    ``readers[r]`` is the sorted set of communities m with
+    ``neighbor_mask[m, r]`` — every m whose aggregation
+    Σ_{r'∈N_m} Ã_{m,r'} Z_{r'} consumes community r's rows (m = r itself
+    included via the diagonal).  This is exactly the per-community view of
+    ``shard_neighbor_graph(neighbor_mask, M)`` transposed, and is what the
+    serving engine's incremental invalidation walks: a feature update to a
+    node of community r dirties Z_l of ``readers``-closure communities and
+    the *halo* entries of ``readers[r] \\ {r}`` (serve.CommunityServer).
+    """
+    nbr = np.asarray(neighbor_mask, bool)
+    return [np.flatnonzero(nbr[:, r]).astype(np.int32)
+            for r in range(nbr.shape[0])]
+
+
+def read_closure(neighbor_mask: Array, seeds: Array, hops: int) -> list[Array]:
+    """Per-hop dirty sets of a community update.
+
+    ``out[l]`` (l = 0..hops) is the sorted communities whose layer-l
+    activations change when the layer-0 rows of ``seeds`` change:
+    ``out[0] = seeds`` and ``out[l] = readers(out[l-1])`` — monotone
+    non-shrinking because the diagonal makes every community its own
+    reader.  Pure topology (no layout needed); the serving engine keys its
+    cache invalidation off these sets and the tests check the dropped
+    entries match them exactly.
+    """
+    nbr = np.asarray(neighbor_mask, bool)
+    cur = np.zeros(nbr.shape[0], dtype=bool)
+    cur[np.asarray(seeds, dtype=np.int64)] = True
+    out = [np.flatnonzero(cur).astype(np.int32)]
+    for _ in range(int(hops)):
+        cur = nbr[:, cur].any(axis=1)
+        out.append(np.flatnonzero(cur).astype(np.int32))
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockCSR:
     """Block-compressed Ã: only the nnz present Ã_{m,r} blocks are stored.
@@ -463,24 +501,38 @@ class PackedDeviceLayout:
 
     def global_unpack_rows(self) -> Array:
         """(M·n_pad,) indices into the (total_rows,) packed stack; pad
-        rows map out of range (use ``mode='fill'``)."""
+        rows map out of range (use ``mode='fill'``).
+
+        Memoized: the table is static per layout and both the trainer
+        metrics and the serving hot path look it up every call, so the
+        Python build loop runs once.  Treat the returned array as
+        read-only (every consumer does)."""
+        cached = self.__dict__.get("_global_unpack_rows")
+        if cached is not None:
+            return cached
         m, n, k = self.num_parts, self.n_pad, self.lanes_per_shard
         out = np.full(m * n, self.total_rows, dtype=np.int32)
         for c in range(m):
             s, rc = c // k, int(self.row_counts[c])
             base = s * self.plane_rows + int(self.local_offsets[c])
             out[c * n: c * n + rc] = base + np.arange(rc)
+        object.__setattr__(self, "_global_unpack_rows", out)
         return out
 
     def global_pack_rows(self) -> Array:
         """(total_rows,) indices into the (M·n_pad,) blocked stack;
-        unused plane rows map out of range (use ``mode='fill'``)."""
+        unused plane rows map out of range (use ``mode='fill'``).
+        Memoized like ``global_unpack_rows`` — read-only result."""
+        cached = self.__dict__.get("_global_pack_rows")
+        if cached is not None:
+            return cached
         m, n, k = self.num_parts, self.n_pad, self.lanes_per_shard
         out = np.full(self.total_rows, m * n, dtype=np.int32)
         for c in range(m):
             s, rc = c // k, int(self.row_counts[c])
             base = s * self.plane_rows + int(self.local_offsets[c])
             out[base: base + rc] = c * n + np.arange(rc)
+        object.__setattr__(self, "_global_pack_rows", out)
         return out
 
     def pack_state(self, x: Array, fill: float = 0.0) -> Array:

@@ -148,6 +148,30 @@ def community_spmm_ell_fused(ell_blocks: jax.Array, ell_offsets: jax.Array,
                                                row_counts, nbr_counts)
 
 
+def community_halo_spmm(ell_blocks: jax.Array, ell_offsets: jax.Array,
+                        ell_mask: jax.Array, self_mask: jax.Array,
+                        z_plane: jax.Array, row_counts: jax.Array,
+                        nbr_counts: jax.Array) -> jax.Array:
+    """Cross-community (halo) half of the packed ELL aggregation:
+    Σ_{r∈N_m\\{m}} Ã_{m,r} Z_r — the self block is masked out of both the
+    slot mask and the per-neighbour row counts, so the diagonal
+    contribution never enters the contraction and the result is exactly
+    the quantity the serving engine caches per (community, layer).
+
+    ``self_mask`` is ``messages.self_slot_mask`` (1 on each row's diagonal
+    slot); remaining operands and the dispatch contract (TPU Pallas /
+    interpret / einsum oracle) are ``community_spmm_ell_packed``'s.
+    ``halo + self-block`` reassembles the full aggregate up to float
+    reassociation (the split sums the d slots in two groups) — the engine
+    therefore anchors its parity guarantees on both paths running this
+    same split, not on matching the one-shot contraction bitwise.
+    """
+    cross_mask = ell_mask * (1.0 - self_mask)
+    cross_counts = (nbr_counts * (cross_mask > 0)).astype(nbr_counts.dtype)
+    return community_spmm_ell_packed(ell_blocks, ell_offsets, cross_mask,
+                                     z_plane, row_counts, cross_counts)
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: int | None = None) -> jax.Array:
     if _on_tpu():

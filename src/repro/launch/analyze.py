@@ -60,6 +60,14 @@ FULL_CONFIGS = QUICK_CONFIGS + [
 ]
 
 
+# serving-engine programs (repro.serve): the steady-state hit path must
+# compile with zero collectives and nothing full-graph-sized (a hit
+# touches one community block + one request-row vector); the miss-path
+# halo kernel legitimately reads the Σ-bucket-rows plane but must still
+# be collective-free (single-device recompute)
+SERVE_CONFIGS = ["serve_hit", "serve_halo"]
+
+
 def _ensure_devices() -> None:
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
@@ -116,6 +124,44 @@ def run_configs(configs: list[dict]) -> list:
     return reports
 
 
+def _build_server():
+    import jax
+
+    from repro.core import gcn, graph
+    from repro.serve import CommunityServer, ServeConfig
+
+    g, part = graph.synthetic_powerlaw_communities(
+        num_parts=8, nodes_per_part=12, attach=1, seed=0, feat_dim=8,
+        size_skew=0.8)
+    cfg = gcn.GCNConfig(layer_dims=(8, 8, g.num_classes))
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True,
+                                          pad_mode="bucketed", num_parts=8)
+    ws = gcn.init_weights(cfg, jax.random.key(0))
+    return CommunityServer(cfg, layout, ws, g.features, ServeConfig())
+
+
+def run_serving_configs(names=None) -> list:
+    from repro import analysis
+
+    picked = set(names) if names else set(SERVE_CONFIGS)
+    srv = _build_server()
+    reports = []
+    if "serve_hit" in picked:
+        hlo = srv.hit_path_lowered(bucket=64).compile().as_text()
+        reports.append(analysis.analyze_hlo(
+            hlo, expectations={
+                "expect_zero_collectives": True,
+                "full_graph_rows": int(srv.dl.plane_rows),
+            }, config="serve_hit"))
+    if "serve_halo" in picked:
+        hlo = srv.halo_path_lowered(layer=1).compile().as_text()
+        reports.append(analysis.analyze_hlo(
+            hlo, expectations={"expect_zero_collectives": True},
+            config="serve_halo"))
+    return reports
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="invariant linter over the benchmark trainer configs")
@@ -129,14 +175,18 @@ def main(argv=None) -> int:
 
     _ensure_devices()
     configs = QUICK_CONFIGS if args.quick else FULL_CONFIGS
+    serve_names = list(SERVE_CONFIGS)
     if args.config:
         picked = set(args.config)
-        unknown = picked - {c["name"] for c in configs}
+        unknown = picked - {c["name"] for c in configs} - set(SERVE_CONFIGS)
         if unknown:
             ap.error(f"unknown config(s): {sorted(unknown)}")
         configs = [c for c in configs if c["name"] in picked]
+        serve_names = [n for n in SERVE_CONFIGS if n in picked]
 
     reports = run_configs(configs)
+    if serve_names:
+        reports.extend(run_serving_configs(serve_names))
     n_err = 0
     for rep in reports:
         print(rep.summary())

@@ -1,0 +1,373 @@
+"""Low-latency community-sharded inference over a trained GCN.
+
+``CommunityServer`` serves final-layer embeddings for single nodes out of
+a trained ``ParallelADMMTrainer`` model (weights + community layout).
+The community structure the trainer exploits for locality is exactly
+what makes inference cacheable:
+
+  * the node set lives on one packed Σ-bucket-rows plane
+    (``CommunityLayout.device_layout(1)``), so community m's rows are a
+    contiguous ``row_counts[m]``-row slice at ``local_offsets[m]``;
+  * an **embedding cache** holds per-(community, layer) activation
+    blocks; a request for node v whose ``(comm(v), L)`` block is resident
+    is answered by a single static row gather out of that block — no
+    aggregation, no collectives, nothing full-graph-sized in the program
+    (the ``serve_hit`` analyze config proves this on the compiled HLO);
+  * a **halo cache** holds the cross-community halves
+    Σ_{r∈N_m\\{m}} Ã_{m,r} Z_{l-1}[r] of each aggregation, so a miss
+    whose inputs are clean recomputes only the *self* block product and
+    the layer GEMM; only a cold/invalidated neighbourhood pays for the
+    packed-kernel halo pass (``kernels.ops.community_halo_spmm``);
+  * a feature update to node v dirties exactly the reader closure of
+    v's community (``graph.read_closure``) — v's own community's cache
+    lines plus the halo entries of communities that read it
+    (``graph.halo_readers``); everything else stays served from cache.
+
+Both caches are fixed-capacity LRU with optional Zipf-aware admission
+(``serve.cache``); ``ServeConfig(cache_enabled=False)`` zeroes the
+capacities, which makes every request recompute — the benchmark baseline
+— while running the *same* compiled programs, so enabled vs disabled
+parity is bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gcn, graph, messages
+from repro.kernels import ops as kops
+from repro.serve.batcher import RequestBatcher
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs (frozen, like TrainerConfig)."""
+
+    embed_capacity: int = 16     # (community, layer) activation blocks
+    halo_capacity: int = 64      # (community, layer) halo aggregates
+    cache_enabled: bool = True   # False: capacity-0 caches (baseline)
+    admission: str = "zipf"      # "zipf" | "lru"
+    sketch_sample: int = 1024    # admission sketch aging period
+    fused: bool = False          # cold-path agg→GEMM via the fused kernel
+    max_batch: int = 1024        # per-community batch bound (ladder cap)
+
+    def __post_init__(self):
+        if self.admission not in ("zipf", "lru"):
+            raise ValueError(f"unknown admission {self.admission!r}")
+
+
+# --- jitted programs ------------------------------------------------------
+# jax.jit caches one executable per operand-shape signature; the batcher
+# pads every varying dim to a pad_ladder bucket, so each helper compiles a
+# small static set of programs that serve all batch compositions.
+
+@jax.jit
+def _take_rows(block: Array, rows: Array) -> Array:
+    """The hit path: gather requested rows out of one community block."""
+    return jnp.take(block, rows, axis=0, mode="fill", fill_value=0.0)
+
+
+@jax.jit
+def _scatter_rows(plane: Array, block: Array, start) -> Array:
+    return jax.lax.dynamic_update_slice(plane, block, (start, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("rc",))
+def _slice_rows(plane: Array, start, *, rc: int) -> Array:
+    return jax.lax.dynamic_slice(plane, (start, 0), (rc, plane.shape[1]))
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def _layer_out(agg: Array, w: Array, *, act: str) -> Array:
+    return gcn.activation_fn(act)(agg @ w)
+
+
+@jax.jit
+def _self_plus_halo(a_self: Array, z_prev: Array, halo: Array) -> Array:
+    return a_self @ z_prev + halo
+
+
+@functools.partial(jax.jit, static_argnames=("rc",))
+def _halo_row(ell_row: Array, off_row: Array, mask_row: Array,
+              self_row: Array, plane: Array, rc_arr: Array,
+              nc_row: Array, *, rc: int) -> Array:
+    out = kops.community_halo_spmm(ell_row, off_row, mask_row, self_row,
+                                   plane, rc_arr, nc_row)
+    return out[0, :rc]
+
+
+@functools.partial(jax.jit, static_argnames=("rc", "act"))
+def _fused_row(ell_row: Array, off_row: Array, mask_row: Array,
+               plane: Array, w: Array, rc_arr: Array, nc_row: Array,
+               *, rc: int, act: str) -> Array:
+    out = kops.community_spmm_ell_fused(ell_row, off_row, mask_row,
+                                        plane, w, rc_arr, nc_row)
+    return gcn.activation_fn(act)(out[0, :rc])
+
+
+class CommunityServer:
+    """Cached community-block inference over a trained model."""
+
+    def __init__(self, cfg: gcn.GCNConfig, layout: graph.CommunityLayout,
+                 weights: Sequence[Array], features: np.ndarray,
+                 config: ServeConfig | None = None):
+        from repro.serve.cache import LRUCache
+
+        self.cfg = cfg
+        self.layout = layout
+        self.config = config or ServeConfig()
+        self.weights = [jnp.asarray(w, jnp.float32) for w in weights]
+        if len(self.weights) != cfg.num_layers:
+            raise ValueError(f"{len(self.weights)} weight matrices for a "
+                             f"{cfg.num_layers}-layer model")
+
+        m = layout.num_parts
+        csr = layout.compress()
+        self.dl = dl = layout.device_layout(1)   # one resident plane
+        rows, nbr = csr.ell_row_counts()
+        self.row_counts = np.asarray(rows, np.int32)              # (M,)
+        offsets = messages.plane_read_offsets(
+            csr.ell_indices, csr.ell_mask, dl.local_offsets)
+        self_mask = messages.self_slot_mask(csr.ell_indices, csr.ell_mask)
+        # per-community static kernel operands, split once so the hot loop
+        # never pays a device-slice dispatch: every row shares the shape
+        # (1, max_deg, ...) so all communities hit the same programs
+        blocks = np.asarray(csr.ell_blocks, np.float32)
+        self._ell_row = [jnp.asarray(blocks[i:i + 1]) for i in range(m)]
+        self._off_row = [jnp.asarray(offsets[i:i + 1]) for i in range(m)]
+        self._mask_row = [jnp.asarray(np.asarray(csr.ell_mask)[i:i + 1])
+                          for i in range(m)]
+        self._self_row = [jnp.asarray(self_mask[i:i + 1]) for i in range(m)]
+        self._nc_row = [jnp.asarray(np.asarray(nbr)[i:i + 1]) for i in range(m)]
+        self._rc_arr = [jnp.asarray(self.row_counts[i:i + 1]) for i in range(m)]
+        ab = np.asarray(layout.a_blocks, np.float32)
+        self._a_self = [jnp.asarray(
+            ab[i, i, :self.row_counts[i], :self.row_counts[i]])
+            for i in range(m)]
+
+        # dependency tables (incremental invalidation)
+        self.neighbor_mask = np.asarray(layout.neighbor_mask, bool)
+        self.readers = graph.halo_readers(self.neighbor_mask)
+        self.neighbors = [np.flatnonzero(self.neighbor_mask[i]).astype(
+            np.int32) for i in range(m)]
+
+        # node id -> (community, block-local row, plane row)
+        perm = np.asarray(layout.perm)
+        n_nodes = int((perm >= 0).sum())
+        node_comm = np.zeros(n_nodes, np.int32)
+        node_row = np.zeros(n_nodes, np.int32)
+        for slot, node in enumerate(perm):
+            if node >= 0:
+                node_comm[node] = slot // layout.n_pad
+                node_row[node] = slot % layout.n_pad
+        self.node_comm, self.node_row = node_comm, node_row
+        self._node_plane_row = (
+            np.asarray(dl.local_offsets)[node_comm] + node_row).astype(
+            np.int32)
+        self.batcher = RequestBatcher(node_comm, node_row,
+                                      max_batch=self.config.max_batch)
+
+        # layer-0 plane: packed features — resident, always fresh
+        z0 = dl.pack_state(layout.pack(
+            np.asarray(features, np.float32)))
+        self.z0_plane = jnp.asarray(z0)
+
+        c = self.config
+        ecap = c.embed_capacity if c.cache_enabled else 0
+        hcap = c.halo_capacity if c.cache_enabled else 0
+        self.embed_cache = LRUCache(ecap, admission=c.admission,
+                                    sample=c.sketch_sample)
+        self.halo_cache = LRUCache(hcap, admission=c.admission,
+                                   sample=c.sketch_sample)
+        self.request_hits = 0
+        self.request_total = 0
+        self.block_computes = 0
+        self.halo_computes = 0
+
+    @classmethod
+    def from_trainer(cls, trainer, config: ServeConfig | None = None
+                     ) -> "CommunityServer":
+        """Build over a trained ``ParallelADMMTrainer``'s weights/layout."""
+        return cls(trainer.cfg, trainer.layout,
+                   trainer.state.weights, trainer.graph.features,
+                   config=config)
+
+    # --- block computation ------------------------------------------------
+
+    def _block0(self, m: int) -> Array:
+        rc = int(self.row_counts[m])
+        return _slice_rows(self.z0_plane, int(self.dl.local_offsets[m]),
+                           rc=rc)
+
+    def _block(self, m: int, layer: int) -> Array:
+        """(row_counts[m], C_layer) activation block, cached."""
+        if layer == 0:
+            return self._block0(m)
+        key = (m, layer)
+        val = self.embed_cache.get(key)
+        if val is not None:
+            return val
+        val = self._compute_block(m, layer)
+        self.embed_cache.put(key, val)
+        return val
+
+    def _neighbor_plane(self, m: int, layer: int, with_self: bool) -> Array:
+        """Scatter the (clean) layer blocks community m reads onto a
+        scratch plane for the packed kernel.  Recursion bottoms out at
+        the always-fresh layer-0 feature plane."""
+        if layer == 0 and with_self:
+            return self.z0_plane
+        c = self.cfg.layer_dims[layer]
+        plane = jnp.zeros((self.dl.plane_rows, c), jnp.float32)
+        for r in self.neighbors[m]:
+            if not with_self and int(r) == m:
+                continue
+            blk = self._block(int(r), layer)
+            plane = _scatter_rows(plane, blk,
+                                  int(self.dl.local_offsets[int(r)]))
+        return plane
+
+    def _compute_halo(self, m: int, layer: int) -> Array:
+        """Σ_{r∈N_m\\{m}} Ã_{m,r} Z_{layer-1}[r] via the packed kernel."""
+        self.halo_computes += 1
+        plane = self._neighbor_plane(m, layer - 1, with_self=False)
+        return _halo_row(self._ell_row[m], self._off_row[m],
+                         self._mask_row[m], self._self_row[m], plane,
+                         self._rc_arr[m], self._nc_row[m],
+                         rc=int(self.row_counts[m]))
+
+    def _compute_block(self, m: int, layer: int) -> Array:
+        self.block_computes += 1
+        act = self.cfg.activation if layer < self.cfg.num_layers \
+            else "identity"
+        key = (m, layer)
+        halo = self.halo_cache.get(key)
+        if halo is None and self.config.fused:
+            # cold path through the fused aggregation→GEMM kernel: one
+            # pass, no halo intermediate — and therefore no halo entry to
+            # admit (the fused trade: faster cold recompute, fuller
+            # recompute after the next invalidation)
+            plane = self._neighbor_plane(m, layer - 1, with_self=True)
+            return _fused_row(self._ell_row[m], self._off_row[m],
+                              self._mask_row[m], plane,
+                              self.weights[layer - 1], self._rc_arr[m],
+                              self._nc_row[m],
+                              rc=int(self.row_counts[m]), act=act)
+        if halo is None:
+            halo = self._compute_halo(m, layer)
+            self.halo_cache.put(key, halo)
+        z_prev = self._block(m, layer - 1)
+        agg = _self_plus_halo(self._a_self[m], z_prev, halo)
+        return _layer_out(agg, self.weights[layer - 1], act=act)
+
+    # --- serving ----------------------------------------------------------
+
+    def serve(self, node_ids: np.ndarray) -> np.ndarray:
+        """Final-layer embeddings for ``node_ids``, in request order."""
+        ids = np.asarray(node_ids)
+        n_l = self.cfg.num_layers
+        out = np.zeros((len(ids), self.cfg.layer_dims[-1]), np.float32)
+        for b in self.batcher.coalesce(ids):
+            hit = (b.comm, n_l) in self.embed_cache
+            block = self._block(b.comm, n_l)
+            self.request_total += b.count
+            if hit:
+                self.request_hits += b.count
+            vals = _take_rows(block, jnp.asarray(b.rows))
+            out[b.positions] = np.asarray(vals)[:b.count]
+        return out
+
+    # --- incremental invalidation ----------------------------------------
+
+    def update_features(self, node_ids: np.ndarray, feats: np.ndarray
+                        ) -> dict:
+        """Apply a feature update and invalidate exactly its read closure.
+
+        Returns the dropped cache keys and the per-hop dirty community
+        sets — the tests assert these match the dependency tables'
+        prediction, and that everything *not* listed keeps serving from
+        cache."""
+        ids = np.asarray(node_ids, np.int64)
+        feats = np.asarray(feats, np.float32)
+        if feats.shape != (len(ids), self.cfg.layer_dims[0]):
+            raise ValueError(f"feats shape {feats.shape} != "
+                             f"({len(ids)}, {self.cfg.layer_dims[0]})")
+        rows = self._node_plane_row[ids]
+        self.z0_plane = self.z0_plane.at[jnp.asarray(rows)].set(
+            jnp.asarray(feats))
+
+        n_l = self.cfg.num_layers
+        seeds = np.unique(self.node_comm[ids])
+        closure = graph.read_closure(self.neighbor_mask, seeds, hops=n_l)
+        nbr_cross = self.neighbor_mask & ~np.eye(
+            self.neighbor_mask.shape[0], dtype=bool)
+        dropped_embed, dropped_halo = [], []
+        for layer in range(1, n_l + 1):
+            for m in closure[layer]:
+                if self.embed_cache.invalidate((int(m), layer)):
+                    dropped_embed.append((int(m), layer))
+            # halo(m, layer) reads Z_{layer-1} of N_m \ {m}
+            halo_dirty = np.flatnonzero(
+                nbr_cross[:, closure[layer - 1]].any(axis=1))
+            for m in halo_dirty:
+                if self.halo_cache.invalidate((int(m), layer)):
+                    dropped_halo.append((int(m), layer))
+        return {"dirty": [c.tolist() for c in closure],
+                "embed": dropped_embed, "halo": dropped_halo}
+
+    # --- introspection ----------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "requests": {
+                "total": self.request_total,
+                "hits": self.request_hits,
+                "hit_rate": round(
+                    self.request_hits / max(self.request_total, 1), 4),
+            },
+            "block_computes": self.block_computes,
+            "halo_computes": self.halo_computes,
+            "embed_cache": self.embed_cache.stats.as_dict(),
+            "halo_cache": self.halo_cache.stats.as_dict(),
+        }
+
+    def reset_stats(self) -> None:
+        self.request_hits = self.request_total = 0
+        self.block_computes = self.halo_computes = 0
+        self.embed_cache.stats.reset()
+        self.halo_cache.stats.reset()
+
+    def hit_path_lowered(self, bucket: int = 64):
+        """The steady-state hit program, lowered for analysis: one
+        community block in, the requested rows out.  The analyze config
+        proves the compiled text has zero collectives and nothing
+        full-plane-sized (serve.analyze expectations)."""
+        rc = int(self.row_counts.max())
+        block = jax.ShapeDtypeStruct((rc, self.cfg.layer_dims[-1]),
+                                     jnp.float32)
+        rows = jax.ShapeDtypeStruct((int(bucket),), jnp.int32)
+        return _take_rows.lower(block, rows)
+
+    def halo_path_lowered(self, layer: int = 1):
+        """The miss-path halo kernel program, lowered for analysis (the
+        plane operand is legitimately Σ-bucket-rows tall here; the rule
+        checked is zero collectives, single-device recompute)."""
+        m = 0
+        c = self.cfg.layer_dims[layer - 1]
+        sd = jax.ShapeDtypeStruct
+        return _halo_row.lower(
+            sd(self._ell_row[m].shape, jnp.float32),
+            sd(self._off_row[m].shape, jnp.int32),
+            sd(self._mask_row[m].shape, jnp.float32),
+            sd(self._self_row[m].shape, jnp.float32),
+            sd((self.dl.plane_rows, c), jnp.float32),
+            sd((1,), jnp.int32),
+            sd(self._nc_row[m].shape, jnp.int32),
+            rc=int(self.row_counts[m]))

@@ -311,3 +311,20 @@ def test_packed_p2p_matches_strided_on_4_shards():
     for tag in ("STATS_OK", "PACKED_BITWISE_OK", "OVERLAP_OK",
                 "SERIAL_PARITY_OK", "HLO_OK"):
         assert tag in out.stdout, out.stdout
+
+
+def test_gather_tables_are_memoized():
+    """The static pack/unpack gather tables are built once and reused —
+    the serving engine and the trainer hot path re-read them every call."""
+    g, part = _skewed()
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True,
+                                          pad_mode="bucketed")
+    dl = layout.device_layout(2)
+    assert dl.global_unpack_rows() is dl.global_unpack_rows()
+    assert dl.global_pack_rows() is dl.global_pack_rows()
+    # memoization must not leak across instances
+    dl2 = layout.device_layout(2)
+    assert dl2.global_unpack_rows() is not dl.global_unpack_rows()
+    np.testing.assert_array_equal(dl2.global_unpack_rows(),
+                                  dl.global_unpack_rows())

@@ -309,3 +309,142 @@ def test_moe_rank_unique_within_expert(t, e, k, seed):
         assert len(set(ranks.tolist())) == len(ranks)
         if len(ranks):
             assert sorted(ranks.tolist()) == list(range(len(ranks)))
+
+
+# ---------------------------------------------------------------------------
+# serving cache / batcher / engine invariants (repro.serve)
+# ---------------------------------------------------------------------------
+
+_CACHE_OPS = st.lists(
+    st.tuples(st.sampled_from(["get", "put", "invalidate"]),
+              st.integers(0, 11)),
+    min_size=1, max_size=120)
+
+
+@given(capacity=st.integers(1, 6), ops=_CACHE_OPS)
+@settings(**SETTINGS)
+def test_lru_cache_matches_ordered_dict_model(capacity, ops):
+    """Plain-LRU admission is exactly an OrderedDict-with-cap: same keys,
+    same eviction order, after any op sequence."""
+    from collections import OrderedDict
+
+    from repro.serve import LRUCache
+    c = LRUCache(capacity, admission="lru")
+    model: OrderedDict = OrderedDict()
+    for op, k in ops:
+        if op == "get":
+            want = model.get(k)
+            if k in model:
+                model.move_to_end(k)
+            assert c.get(k) == want
+        elif op == "put":
+            assert c.put(k, k)      # plain LRU admits everything
+            if k in model:
+                model.move_to_end(k)
+            model[k] = k
+            if len(model) > capacity:
+                model.popitem(last=False)
+        else:
+            assert c.invalidate(k) == (k in model)
+            model.pop(k, None)
+        assert c.keys() == list(model)
+        assert len(c) <= capacity
+
+
+@given(capacity=st.integers(0, 6), ops=_CACHE_OPS)
+@settings(**SETTINGS)
+def test_zipf_admission_invariants(capacity, ops):
+    """Zipf admission: size never exceeds capacity, a rejected put leaves
+    the cache untouched, and an eviction never swaps a strictly hotter
+    victim for a colder candidate (the sketch's invariant)."""
+    from repro.serve import LRUCache
+    c = LRUCache(capacity, admission="zipf")
+    for op, k in ops:
+        if op == "get":
+            got = c.get(k)
+            assert (got is not None) == (k in c)
+        elif op == "put":
+            before = c.keys()
+            full = len(c) >= capacity and k not in c
+            victim = before[0] if before else None
+            est = c._sketch.estimate
+            admitted = c.put(k, k)
+            if admitted:
+                assert k in c
+                if full and capacity:
+                    # the displaced victim was not strictly hotter
+                    assert est(victim) <= est(k)
+            else:
+                assert c.keys() == before and k not in c
+        else:
+            c.invalidate(k)
+            assert k not in c
+        assert len(c) <= capacity
+
+
+@given(n=st.integers(8, 200), reqs=st.integers(1, 64),
+       m=st.integers(1, 7), seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_batcher_coalesce_is_a_partition(n, reqs, m, seed):
+    """coalesce() partitions the request vector: positions are a disjoint
+    cover, every bucket is on the pad ladder, rows match the node tables."""
+    from repro.serve import RequestBatcher
+    rng = np.random.default_rng(seed)
+    node_comm = rng.integers(0, m, n).astype(np.int32)
+    node_row = rng.integers(0, 32, n).astype(np.int32)
+    bat = RequestBatcher(node_comm, node_row, max_batch=64)
+    ids = rng.integers(0, n, reqs)
+    batches = bat.coalesce(ids)
+    seen = np.concatenate([b.positions for b in batches])
+    assert sorted(seen.tolist()) == list(range(reqs))
+    assert [b.comm for b in batches] == sorted(b.comm for b in batches)
+    for b in batches:
+        assert b.bucket in bat.ladder and b.bucket >= b.count
+        np.testing.assert_array_equal(node_comm[ids[b.positions]], b.comm)
+        np.testing.assert_array_equal(b.rows[:b.count],
+                                      node_row[ids[b.positions]])
+
+
+@pytest.fixture(scope="module")
+def _property_server():
+    from repro.core import gcn
+    from repro.serve import CommunityServer
+    g, part = graph.synthetic_powerlaw_communities(
+        num_parts=4, nodes_per_part=10, attach=1, seed=0, feat_dim=4,
+        size_skew=0.8)
+    cfg = gcn.GCNConfig(layer_dims=(4, 4, g.num_classes))
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True,
+                                          pad_mode="bucketed", num_parts=4)
+    ws = gcn.init_weights(cfg, jax.random.key(0))
+    return g, cfg, layout, ws, CommunityServer(cfg, layout, ws, g.features)
+
+
+@given(ids=st.lists(st.integers(0, 39), min_size=1, max_size=24))
+@settings(**SETTINGS)
+def test_serve_hit_after_miss_is_bitwise(_property_server, ids):
+    """Any request vector served twice is bitwise-identical: the cached
+    block IS the block the miss computed."""
+    *_, srv = _property_server
+    arr = np.asarray(ids)
+    first = srv.serve(arr)
+    np.testing.assert_array_equal(first, srv.serve(arr))
+
+
+@given(node=st.integers(0, 39), seed=st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_serve_invalidation_parity_with_fresh_engine(_property_server,
+                                                     node, seed):
+    """After an arbitrary single-node feature update, the invalidated
+    engine serves bitwise what a fresh engine on the updated features
+    serves — invalidation dropped everything stale and nothing it needs."""
+    from repro.serve import CommunityServer
+    g, cfg, layout, ws, srv = _property_server
+    ids = np.arange(g.num_nodes)
+    srv.serve(ids)
+    rng = np.random.default_rng(seed)
+    feats = rng.normal(size=(1, cfg.layer_dims[0])).astype(np.float32)
+    srv.update_features([node], feats)
+    updated = np.asarray(srv.z0_plane)[srv._node_plane_row]
+    fresh = CommunityServer(cfg, layout, ws, updated)
+    np.testing.assert_array_equal(srv.serve(ids), fresh.serve(ids))

@@ -1,0 +1,128 @@
+"""Deterministic serving-cache tests: LRU order, Zipf admission, stats.
+
+The randomized counterparts (arbitrary op sequences against a shadow
+model) live in tests/test_property.py; these pin the exact semantics the
+engine relies on with hand-built sequences.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import CacheStats, FrequencySketch, LRUCache
+
+
+def test_capacity_bound_and_lru_eviction_order():
+    c = LRUCache(3)
+    for k in "abcd":
+        assert c.put(k, k.upper())
+    assert len(c) == 3
+    # 'a' was least recently used -> evicted
+    assert "a" not in c and c.keys() == ["b", "c", "d"]
+    assert c.stats.evictions == 1
+
+
+def test_get_refreshes_recency():
+    c = LRUCache(3)
+    for k in "abc":
+        c.put(k, 0)
+    assert c.get("a") == 0          # 'a' now most recent
+    c.put("d", 0)                   # evicts 'b', not 'a'
+    assert "a" in c and "b" not in c
+    assert c.keys() == ["c", "a", "d"]
+
+
+def test_put_overwrite_refreshes_without_eviction():
+    c = LRUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.put("a", 3)            # overwrite, no eviction
+    assert len(c) == 2 and c.get("a") == 3
+    assert c.stats.evictions == 0
+    assert c.keys() == ["b", "a"]
+
+
+def test_capacity_zero_disables():
+    c = LRUCache(0)
+    assert not c.put("a", 1)
+    assert c.get("a") is None
+    assert len(c) == 0
+    assert c.stats.rejections == 1 and c.stats.misses == 1
+
+
+def test_zipf_admission_refuses_cold_candidate():
+    c = LRUCache(1, admission="zipf")
+    for _ in range(5):
+        c.get("hot")                # build frequency for the resident key
+    c.put("hot", 1)
+    # a single-touch candidate must not evict the hot resident
+    c.get("cold")
+    assert not c.put("cold", 2)
+    assert "hot" in c and "cold" not in c
+    assert c.stats.rejections == 1
+
+
+def test_zipf_admission_admits_hotter_candidate():
+    c = LRUCache(1, admission="zipf")
+    c.get("old")
+    c.put("old", 1)
+    for _ in range(3):
+        c.get("new")                # hotter than the resident
+    assert c.put("new", 2)
+    assert "new" in c and "old" not in c
+    assert c.stats.evictions == 1
+
+
+def test_contains_is_side_effect_free():
+    c = LRUCache(2, admission="zipf")
+    c.put("a", 1)
+    c.put("b", 2)
+    before = (c.stats.hits, c.stats.misses, c.keys())
+    assert "a" in c and "z" not in c
+    assert (c.stats.hits, c.stats.misses, c.keys()) == before
+
+
+def test_invalidate_and_invalidate_where():
+    c = LRUCache(8)
+    for m in range(4):
+        c.put((m, 1), m)
+        c.put((m, 2), m)
+    assert c.invalidate((0, 1))
+    assert not c.invalidate((0, 1))     # already gone
+    doomed = c.invalidate_where(lambda k: k[1] == 2)
+    assert sorted(doomed) == [(m, 2) for m in range(4)]
+    assert len(c) == 3
+    assert c.stats.invalidations == 5
+
+
+def test_clear_counts_invalidations():
+    c = LRUCache(4)
+    for k in "abc":
+        c.put(k, 0)
+    c.clear()
+    assert len(c) == 0 and c.stats.invalidations == 3
+
+
+def test_frequency_sketch_ages():
+    s = FrequencySketch(sample=8)
+    for _ in range(7):
+        s.touch("a")
+    assert s.estimate("a") == 7
+    s.touch("b")                    # 8th touch triggers halving
+    assert s.estimate("a") == 3     # 7 // 2
+    assert s.estimate("b") == 0     # 1 // 2 -> dropped
+
+
+def test_stats_hit_rate():
+    st = CacheStats(hits=3, misses=1)
+    assert st.lookups == 4 and st.hit_rate == 0.75
+    assert st.as_dict()["hit_rate"] == 0.75
+    st.reset()
+    assert st.lookups == 0 and st.hit_rate == 0.0
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        LRUCache(-1)
+    with pytest.raises(ValueError, match="admission"):
+        LRUCache(2, admission="fifo")
+    with pytest.raises(ValueError, match="sample"):
+        FrequencySketch(sample=0)

@@ -1,0 +1,173 @@
+"""CommunityServer engine tests: correctness vs the dense forward,
+cache determinism/parity, incremental invalidation, batching shapes, and
+the compiled hit path's zero-collective guarantee."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import gcn, graph
+from repro.serve import CommunityServer, ServeConfig
+
+M = 8
+
+
+def _build(config: "ServeConfig | None" = None, seed: int = 0):
+    g, part = graph.synthetic_powerlaw_communities(
+        num_parts=M, nodes_per_part=12, attach=1, seed=seed, feat_dim=8,
+        size_skew=0.8)
+    cfg = gcn.GCNConfig(layer_dims=(8, 8, g.num_classes))
+    layout = graph.build_community_layout(g.num_nodes, g.edges, part,
+                                          compressed=True,
+                                          pad_mode="bucketed", num_parts=M)
+    ws = gcn.init_weights(cfg, jax.random.key(seed))
+    srv = CommunityServer(cfg, layout, ws, g.features, config)
+    return g, cfg, ws, srv
+
+
+@pytest.fixture(scope="module")
+def served():
+    return _build()
+
+
+def test_serve_matches_dense_forward(served):
+    g, cfg, ws, srv = served
+    a = graph.normalized_adjacency(g.num_nodes, g.edges)
+    want = np.asarray(gcn.forward(cfg, a, g.features, ws)[-1])
+    got = srv.serve(np.arange(g.num_nodes))
+    # per-community self+halo split reassociates the dense contraction
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=1e-4)
+
+
+def test_hit_after_miss_is_bitwise(served):
+    g, _, _, srv = served
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, g.num_nodes, size=48)
+    first = srv.serve(ids)          # fills the cache for these communities
+    h0 = srv.request_hits
+    second = srv.serve(ids)         # pure hit path
+    assert srv.request_hits - h0 == len(ids)
+    np.testing.assert_array_equal(first, second)
+
+
+def test_request_order_preserved(served):
+    g, _, _, srv = served
+    ids = np.array([g.num_nodes - 1, 0, 5, 0, 17, 3])
+    out = srv.serve(ids)
+    singles = np.concatenate([srv.serve(np.array([i])) for i in ids])
+    np.testing.assert_array_equal(out, singles)
+
+
+def test_cache_disabled_is_bitwise_parity():
+    g, _, _, on = _build(ServeConfig(cache_enabled=True))
+    _, _, _, off = _build(ServeConfig(cache_enabled=False))
+    ids = np.arange(g.num_nodes)
+    a = on.serve(ids)
+    b = off.serve(ids)
+    np.testing.assert_array_equal(a, b)
+    # disabled really caches nothing and recomputes every batch
+    assert len(off.embed_cache) == 0 and off.request_hits == 0
+    assert off.block_computes > on.block_computes
+
+
+def test_fused_cold_path_matches(served):
+    g, _, _, srv = served
+    _, _, _, fused = _build(ServeConfig(fused=True, cache_enabled=False))
+    ids = np.arange(g.num_nodes)
+    np.testing.assert_allclose(fused.serve(ids), srv.serve(ids),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_invalidation_matches_dependency_tables():
+    g, cfg, ws, srv = _build()
+    srv.serve(np.arange(g.num_nodes))       # warm every cache line
+    n_l = cfg.num_layers
+    assert len(srv.embed_cache) > 0
+
+    node = 0
+    feats = np.asarray(g.features)[[node]] + 1.0
+    rep = srv.update_features([node], feats)
+
+    # the dirty sets are the read closure of node 0's community
+    seeds = np.array([srv.node_comm[node]])
+    closure = graph.read_closure(srv.neighbor_mask, seeds, hops=n_l)
+    for hop, want in enumerate(closure):
+        np.testing.assert_array_equal(rep["dirty"][hop], want)
+
+    nbr_cross = srv.neighbor_mask & ~np.eye(M, dtype=bool)
+    for layer in range(1, n_l + 1):
+        want_embed = {(int(m), layer) for m in closure[layer]}
+        got_embed = {k for k in rep["embed"] if k[1] == layer}
+        assert got_embed == want_embed
+        want_halo = {(int(m), layer) for m in np.flatnonzero(
+            nbr_cross[:, closure[layer - 1]].any(axis=1))}
+        got_halo = {k for k in rep["halo"] if k[1] == layer}
+        assert got_halo == want_halo
+
+    # communities outside the hop-1 closure keep their layer-1 lines
+    clean = set(range(M)) - set(int(m) for m in closure[1])
+    assert clean, "test graph too dense to observe surviving cache lines"
+    for m in clean:
+        assert (m, 1) in srv.embed_cache
+
+
+def test_post_update_serving_matches_fresh_engine():
+    g, cfg, ws, srv = _build()
+    ids = np.arange(g.num_nodes)
+    srv.serve(ids)
+    rng = np.random.default_rng(1)
+    touched = np.array([2, 40, 41])
+    feats = rng.normal(size=(3, cfg.layer_dims[0])).astype(np.float32)
+    srv.update_features(touched, feats)
+
+    new_features = np.asarray(g.features).copy()
+    new_features[touched] = feats
+    fresh = CommunityServer(cfg, srv.layout, ws, new_features)
+    np.testing.assert_array_equal(srv.serve(ids), fresh.serve(ids))
+
+
+def test_update_features_validates_shape(served):
+    g, cfg, _, srv = served
+    with pytest.raises(ValueError, match="feats shape"):
+        srv.update_features([0], np.zeros((2, cfg.layer_dims[0]),
+                                          np.float32))
+
+
+def test_batcher_buckets_on_pad_ladder(served):
+    g, _, _, srv = served
+    rng = np.random.default_rng(2)
+    ids = rng.integers(0, g.num_nodes, size=100)
+    batches = srv.batcher.coalesce(ids)
+    ladder = set(srv.batcher.ladder)
+    seen = np.concatenate([b.positions for b in batches])
+    assert sorted(seen) == list(range(len(ids)))
+    for b in batches:
+        assert b.bucket in ladder and b.bucket >= b.count
+        np.testing.assert_array_equal(srv.node_comm[ids[b.positions]],
+                                      b.comm)
+        np.testing.assert_array_equal(b.rows[:b.count],
+                                      srv.node_row[ids[b.positions]])
+        np.testing.assert_array_equal(b.rows[b.count:], 0)
+
+
+def test_hit_path_compiles_collective_free(served):
+    from repro import analysis
+    from repro.analysis import hlo as hlo_mod
+
+    _, _, _, srv = served
+    text = srv.hit_path_lowered(bucket=64).compile().as_text()
+    census = hlo_mod.hlo_census(text)
+    assert sum(v["count"] for v in census.collectives.values()) == 0
+    rep = analysis.analyze_hlo(text, expectations={
+        "expect_zero_collectives": True,
+        "full_graph_rows": int(srv.dl.plane_rows),
+    }, config="serve_hit")
+    assert not rep.errors()
+
+
+def test_stats_shape(served):
+    _, _, _, srv = served
+    srv.serve(np.array([0, 1, 2]))
+    s = srv.stats()
+    assert {"requests", "block_computes", "halo_computes", "embed_cache",
+            "halo_cache"} <= set(s)
+    assert s["requests"]["total"] >= 3
